@@ -1,0 +1,45 @@
+"""Paper Fig 11/12: {3,2}-lollipop with cache structures CS1/CS2/CS3.
+
+All three TDs have width 2; they differ in adhesion *dimensions* —
+demonstrating that CLFTJ should target small adhesions, not just treewidth.
+"""
+from __future__ import annotations
+
+from repro.core import (TreeDecomposition, clftj_count, lftj_count,
+                        lollipop_query)
+from repro.data.graphs import dataset
+
+from .common import run_ref
+
+F = frozenset
+
+# lollipop: clique x1x2x3 + path x3-x4-x5
+CS = {
+    # one 1-dim cache (adhesion {x3})
+    "CS1": TreeDecomposition([F("x1 x2 x3".split()), F("x3 x4 x5".split())],
+                             [-1, 0]),
+    # two 1-dim caches ({x3}, {x4})
+    "CS2": TreeDecomposition([F("x1 x2 x3".split()), F("x3 x4".split()),
+                              F("x4 x5".split())], [-1, 0, 1]),
+    # one 2-dim ({x2,x3}) + one 1-dim ({x4})
+    "CS3": TreeDecomposition([F("x1 x2 x3".split()), F("x2 x3 x4".split()),
+                              F("x4 x5".split())], [-1, 0, 1]),
+}
+
+
+def main() -> None:
+    q = lollipop_query(3, 2)
+    for ds in ("wiki-vote-like", "ego-facebook-like"):
+        db = dataset(ds)
+        order0 = tuple(q.variables)
+        run_ref(f"fig11/{ds}/lftj",
+                lambda c: lftj_count(q, order0, db, c))
+        for name, td in CS.items():
+            td.validate(q)
+            order = td.strongly_compatible_order()
+            run_ref(f"fig11/{ds}/clftj-{name}",
+                    lambda c: clftj_count(q, td, order, db, None, c))
+
+
+if __name__ == "__main__":
+    main()

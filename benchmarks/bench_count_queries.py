@@ -1,0 +1,37 @@
+"""Paper Fig 5: count-query runtimes (5-path, 5-cycle, 5-rand) across
+datasets, for LFTJ / CLFTJ / YTD — plus the §1 memory-access analysis
+(derived column carries the access counts)."""
+from __future__ import annotations
+
+from repro.core import (CachePolicy, choose_plan, clftj_count, lftj_count,
+                        ytd_count, path_query, cycle_query,
+                        random_graph_query, jax_clftj_count)
+from repro.data.graphs import dataset
+
+from .common import run_ref, run_jax
+
+DATASETS = ("wiki-vote-like", "gnutella-like", "ca-grqc-like")
+QUERIES = (("5-path", lambda: path_query(5)),
+           ("5-cycle", lambda: cycle_query(5)),
+           ("5-rand(0.4)", lambda: random_graph_query(5, 0.4, seed=1)))
+
+
+def main() -> None:
+    for ds in DATASETS:
+        db = dataset(ds)
+        for qname, qf in QUERIES:
+            q = qf()
+            td, order = choose_plan(q, db.stats())
+            run_ref(f"fig5/{ds}/{qname}/lftj",
+                    lambda c: lftj_count(q, order, db, c))
+            run_ref(f"fig5/{ds}/{qname}/clftj",
+                    lambda c: clftj_count(q, td, order, db, None, c))
+            run_ref(f"fig5/{ds}/{qname}/ytd",
+                    lambda c: ytd_count(q, td, db, c))
+            run_jax(f"fig5/{ds}/{qname}/clftj-jax",
+                    lambda: jax_clftj_count(q, td, order, db,
+                                            capacity=1 << 15))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Fig 7: {3-6}-cycle count scaling.  3-cycle (triangle) has no
+nontrivial TD, so CLFTJ degenerates to LFTJ — same runtimes expected."""
+from __future__ import annotations
+
+from repro.core import (choose_plan, clftj_count, lftj_count, ytd_count,
+                        cycle_query)
+from repro.data.graphs import dataset
+
+from .common import run_ref
+
+
+def main() -> None:
+    for ds in ("wiki-vote-like", "ego-facebook-like"):
+        db = dataset(ds)
+        for n in range(3, 7):
+            q = cycle_query(n)
+            td, order = choose_plan(q, db.stats())
+            run_ref(f"fig7/{ds}/{n}-cycle/lftj",
+                    lambda c: lftj_count(q, order, db, c))
+            run_ref(f"fig7/{ds}/{n}-cycle/clftj",
+                    lambda c: clftj_count(q, td, order, db, None, c))
+            run_ref(f"fig7/{ds}/{n}-cycle/ytd",
+                    lambda c: ytd_count(q, td, db, c))
+
+
+if __name__ == "__main__":
+    main()

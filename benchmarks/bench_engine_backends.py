@@ -1,0 +1,38 @@
+"""Beyond-paper: host reference CLFTJ vs the vectorized JAX engine, and the
+engine's cache-tier ablation (dedup / persistent table / both / none).
+This is the measured §Perf series for the join engine."""
+from __future__ import annotations
+
+from repro.core import choose_plan, clftj_count, cycle_query, path_query
+from repro.core.cached_frontier import JaxCachedTrieJoin
+from repro.data.graphs import dataset
+
+from .common import run_jax, run_ref
+
+
+def main() -> None:
+    for ds in ("wiki-vote-like", "ego-twitter-like"):
+        db = dataset(ds)
+        for qname, q in (("5-path", path_query(5)),
+                         ("5-cycle", cycle_query(5))):
+            td, order = choose_plan(q, db.stats())
+            run_ref(f"engine/{ds}/{qname}/ref-clftj",
+                    lambda c: clftj_count(q, td, order, db, None, c))
+            for label, kw in (
+                    ("none", dict(dedup=False, cache_slots=0)),
+                    ("dedup", dict(dedup=True, cache_slots=0)),
+                    ("table", dict(dedup=False, cache_slots=1 << 16)),
+                    ("both", dict(dedup=True, cache_slots=1 << 16))):
+                eng = JaxCachedTrieJoin(q, td, order, db,
+                                        capacity=1 << 14, **kw)
+                # warm-up compile, then measure
+                eng.count()
+                stats0 = dict(eng.stats)
+                eng2 = JaxCachedTrieJoin(q, td, order, db,
+                                         capacity=1 << 14, **kw)
+                r = run_jax(f"engine/{ds}/{qname}/jax-{label}", eng2.count)
+                r["tier1"] = eng2.stats["tier1_rows_collapsed"]
+
+
+if __name__ == "__main__":
+    main()

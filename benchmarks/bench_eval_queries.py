@@ -1,0 +1,31 @@
+"""Paper Figs 8/9: full query evaluation (materialized results) for
+{3-4}-path and {3-5}-cycle, plus a representative random-graph query."""
+from __future__ import annotations
+
+from repro.core import (choose_plan, clftj_evaluate, lftj_evaluate,
+                        ytd_evaluate, path_query, cycle_query,
+                        random_graph_query)
+from repro.data.graphs import dataset
+
+from .common import run_ref
+
+
+def main() -> None:
+    for ds in ("wiki-vote-like", "gnutella-like"):
+        db = dataset(ds)
+        queries = [("3-path", path_query(3)), ("4-path", path_query(4)),
+                   ("3-cycle", cycle_query(3)), ("4-cycle", cycle_query(4)),
+                   ("5-cycle", cycle_query(5)),
+                   ("5-rand(0.4)", random_graph_query(5, 0.4, seed=1))]
+        for qname, q in queries:
+            td, order = choose_plan(q, db.stats())
+            run_ref(f"fig8/{ds}/{qname}/lftj-eval",
+                    lambda c: len(lftj_evaluate(q, order, db, c)))
+            run_ref(f"fig8/{ds}/{qname}/clftj-eval",
+                    lambda c: len(clftj_evaluate(q, td, order, db, None, c)))
+            run_ref(f"fig8/{ds}/{qname}/ytd-eval",
+                    lambda c: len(ytd_evaluate(q, td, db, c)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""LM substrate micro-bench: wall-clock train/decode step on CPU for three
+reduced arch families (the full-scale numbers live in the dry-run roofline
+tables, EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import Model
+from repro.train.train_step import TrainConfig, init_train_state, \
+    make_train_step
+
+from .common import emit
+
+
+def main() -> None:
+    for name in ("minitron-8b", "qwen3-moe-235b-a22b", "rwkv6-7b"):
+        cfg = get_arch(name + "-smoke")
+        model = Model(cfg)
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, TrainConfig()))
+        batch = {"tokens": jnp.ones((4, 32), jnp.int32),
+                 "targets": jnp.ones((4, 32), jnp.int32)}
+        state, _ = step(state, batch)      # compile
+        t0 = time.perf_counter()
+        iters = 5
+        for _ in range(iters):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = (time.perf_counter() - t0) / iters
+        emit(f"lm/{name}-smoke/train_step", dt * 1e6,
+             f"loss={float(metrics['loss']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

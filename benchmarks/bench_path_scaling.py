@@ -1,0 +1,27 @@
+"""Paper Fig 6: {3-7}-path count scaling (CLFTJ's speedup grows with query
+size; vanilla LFTJ times out on the big ones, as in the paper)."""
+from __future__ import annotations
+
+from repro.core import (choose_plan, clftj_count, lftj_count, ytd_count,
+                        path_query)
+from repro.data.graphs import dataset
+
+from .common import run_ref
+
+
+def main() -> None:
+    for ds in ("wiki-vote-like", "ego-facebook-like"):
+        db = dataset(ds)
+        for n in range(3, 8):
+            q = path_query(n)
+            td, order = choose_plan(q, db.stats())
+            run_ref(f"fig6/{ds}/{n}-path/lftj",
+                    lambda c: lftj_count(q, order, db, c))
+            run_ref(f"fig6/{ds}/{n}-path/clftj",
+                    lambda c: clftj_count(q, td, order, db, None, c))
+            run_ref(f"fig6/{ds}/{n}-path/ytd",
+                    lambda c: ytd_count(q, td, db, c))
+
+
+if __name__ == "__main__":
+    main()

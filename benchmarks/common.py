@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing: timing, budgets, CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.db import Counters, JoinBudgetExceeded
+
+# memory-access budget standing in for the paper's 10-hour timeout
+DEFAULT_BUDGET = 25_000_000
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def run_ref(name: str, fn: Callable[[Counters], int],
+            budget: int = DEFAULT_BUDGET) -> Optional[Dict]:
+    """Time one reference-engine invocation with an access budget."""
+    counters = Counters(budget=budget)
+    t0 = time.perf_counter()
+    try:
+        result = fn(counters)
+    except JoinBudgetExceeded:
+        dt = time.perf_counter() - t0
+        emit(name, dt * 1e6,
+             f"TIMEOUT(budget={budget});mem={counters.mem_accesses}")
+        return None
+    dt = time.perf_counter() - t0
+    snap = counters.snapshot()
+    emit(name, dt * 1e6,
+         f"count={result};mem={snap['mem_accesses']};"
+         f"hits={snap['cache_hits']};intrmd={snap['intermediate_tuples']}")
+    return {"result": result, "seconds": dt, **snap}
+
+
+def run_jax(name: str, fn: Callable[[], int]) -> Dict:
+    t0 = time.perf_counter()
+    result = fn()
+    dt = time.perf_counter() - t0
+    emit(name, dt * 1e6, f"count={result}")
+    return {"result": result, "seconds": dt}

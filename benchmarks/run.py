@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Module map:
+  bench_count_queries   — Fig 5 (+§1 memory-access analysis)
+  bench_path_scaling    — Fig 6
+  bench_cycle_scaling   — Fig 7
+  bench_eval_queries    — Figs 8/9
+  bench_cache_size      — Fig 10
+  bench_cache_structure — Figs 11/12
+  bench_td_skew         — Figs 13/14
+  bench_engine_backends — beyond-paper: vectorized engine + tier ablation
+  bench_lm_step         — LM substrate wall-clock micro-bench
+"""
+import argparse
+import sys
+
+MODULES = [
+    "bench_count_queries", "bench_path_scaling", "bench_cycle_scaling",
+    "bench_eval_queries", "bench_cache_size", "bench_cache_structure",
+    "bench_td_skew", "bench_engine_backends", "bench_lm_step",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes to run")
+    args = ap.parse_args()
+    mods = MODULES if not args.only else [
+        m for m in MODULES if any(s in m for s in args.only.split(","))]
+    print("name,us_per_call,derived")
+    for m in mods:
+        print(f"# --- {m} ---", flush=True)
+        mod = __import__(f"benchmarks.{m}", fromlist=["main"])
+        try:
+            mod.main()
+        except Exception as e:     # keep the harness running
+            print(f"{m},0,ERROR:{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Architecture configuration schema for the LM substrate.
+
+Every assigned architecture is an ``ArchConfig`` instance (one module per
+arch under ``repro/configs``).  The config is deliberately explicit — layer
+pattern, GQA widths, MoE routing, recurrent block dims — so that the dry-run
+and roofline math can be derived from it without touching model code.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    act: str = "silu"              # silu (swiglu) | gelu
+    rope_theta: float = 10_000.0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # --- layer pattern (repeated; remainder layers appended unrolled) ---
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: Optional[int] = None   # sliding window for "local" blocks
+    d_rnn: Optional[int] = None    # RG-LRU width
+    conv_width: int = 4
+    # --- vlm ---
+    n_image_tokens: int = 0
+    # --- enc-dec (audio) ---
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0
+    # --- attention-free (rwkv) ---
+    rwkv_head_dim: int = 64
+    # --- training knobs ---
+    remat_policy: str = "full"     # none | full | dots
+    dtype_compute: str = "bfloat16"
+    max_seq: int = 4096            # default trained context (shapes override)
+    # cost-probe mode: unroll every scan (layers, flash blocks, loss chunks)
+    # so compiled.cost_analysis() counts true totals — XLA counts a while
+    # body ONCE regardless of trip count (see launch/costprobe.py)
+    cost_exact: bool = False
+    # Megatron-style sequence parallelism: residuals/LN constrained to a
+    # sequence-sharded layout between blocks, turning per-layer activation
+    # all-reduces into reduce-scatter+all-gather pairs (half the bytes) and
+    # shrinking saved activations by the model-axis factor.  Only meaningful
+    # under a mesh context (dry-run / production); see §Perf.
+    seq_shard: bool = False
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        return self.block_pattern
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_rem_layers(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        p = self.pattern
+        return p * self.n_groups + p[: self.n_rem_layers]
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Exact parameter count of this config (used for 6ND model FLOPs).
+
+        MoE counts all experts; ``active_param_count`` counts routed-active.
+        """
+        from ..models.specs import model_specs, count_params
+        return count_params(model_specs(self))
+
+    def active_param_count(self) -> int:
+        total = self.param_count()
+        if self.n_experts and self.top_k:
+            from ..models.specs import model_specs, count_params, expert_params
+            all_e, per_e = expert_params(self)
+            total = total - all_e + self.top_k * per_e * len(
+                [k for k in self.layer_kinds() if k == "moe"])
+        return total
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        pat_len = len(self.pattern)
+        n_layers = max(pat_len, min(2 * pat_len, 4))
+        return replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=16,
+            d_ff=128,
+            vocab=256,
+            d_rnn=64 if self.d_rnn else None,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            window=16 if self.window else None,
+            n_image_tokens=8 if self.n_image_tokens else 0,
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            encoder_seq=16 if self.encoder_seq else 0,
+            rwkv_head_dim=16,
+            max_seq=32,
+        )

@@ -1,0 +1,35 @@
+"""The paper's own artifact: CLFTJ join-engine configuration presets.
+
+These mirror the knobs of the paper's implementation (§5.1): cache bound
+(Fig 10), admission threshold (§3.4), adhesion-dimension cap (the paper's
+unordered_map supports <= 2 key attributes), TD-enumeration budget (§4.3) —
+plus the TPU-engine knobs (frontier capacity, tier-1 dedup).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class JoinEngineConfig:
+    # planning (paper §4)
+    max_adhesion: int = 2          # separator-size bound in TD enumeration
+    td_limit: int = 24             # TDs scored before picking one
+    # host reference engine (paper Fig 2)
+    support_threshold: int = 1     # §3.4 admission policy
+    capacity: Optional[int] = None  # Fig 10 dynamic cache bound (None = inf)
+    evict: str = "none"            # none | lru
+    # vectorized engine (DESIGN.md §2)
+    frontier_capacity: int = 1 << 16
+    cache_slots: int = 1 << 16     # tier-2 direct-mapped table slots
+    dedup: bool = True             # tier-1 intra-chunk dedup
+    impl: str = "bsearch"          # bsearch | pallas
+
+
+PAPER_FAITHFUL = JoinEngineConfig(
+    # "We first consider caches that store every intermediate result" (§5.1)
+    support_threshold=1, capacity=None)
+
+BOUNDED_100K = JoinEngineConfig(capacity=100_000)   # Fig 10 mid-point
+TPU_DEFAULT = JoinEngineConfig()

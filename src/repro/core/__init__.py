@@ -1,0 +1,21 @@
+"""The paper's primary contribution: flexible caching in trie joins (CLFTJ).
+
+Layers:
+  * planning  — cq / gaifman / td / separators / decompose (paper §2, §4)
+  * reference — trie / lftj_ref / clftj_ref / yannakakis (paper Figs 1-2, §5.1)
+  * engine    — frontier / cached_frontier (TPU-native vectorized CLFTJ)
+  * facade    — engine.count / engine.evaluate / engine.plan_query
+"""
+from .cq import (CQ, Atom, cq, path_query, cycle_query, clique_query,
+                 lollipop_query, random_graph_query, two_relation_cycle_query)
+from .db import Counters, Database, graph_db
+from .td import TreeDecomposition, singleton_td
+from .decompose import (choose_plan, enumerate_tds, generic_decompose,
+                        DBStats)
+from .clftj_ref import CLFTJ, CachePolicy, Plan
+from .lftj_ref import LFTJ, lftj_count, lftj_evaluate
+from .clftj_ref import clftj_count, clftj_evaluate
+from .yannakakis import YTD, ytd_count, ytd_evaluate
+from .frontier import JaxTrieJoin, jax_lftj_count, jax_lftj_evaluate
+from .cached_frontier import JaxCachedTrieJoin, jax_clftj_count
+from . import engine

@@ -1,0 +1,260 @@
+"""Vectorized CLFTJ in JAX — adhesion-keyed memoization for the frontier join.
+
+TPU-native realization of the paper's Figure 2 (see DESIGN.md §2):
+
+* **Tier 1 — intra-chunk dedup.**  On entering TD node ``c`` the frontier rows
+  sharing an adhesion key μ|α are collapsed to unique representatives; the
+  subtree is expanded once per distinct key and the resulting per-rep counts
+  are scattered back as factor multipliers.  This is the paper's reuse
+  executed as sort/segment data-parallel work, with zero persistent memory.
+
+* **Tier 2 — persistent bounded cache.**  A direct-mapped device table
+  (keys/values/valid arrays, K slots — the paper's *dynamic cache size* knob,
+  Fig 10) is probed before dedup and filled after the subtree completes.
+  Collisions overwrite (hardware-style direct mapping = an admission/eviction
+  policy; caching is optional so correctness is unaffected).  Per the paper's
+  own implementation, only adhesions of dimension <= 2 are cached.
+
+Both tiers preserve LFTJ's guarantees: they only ever *skip recomputation of
+subtrees whose count is already known*, exactly like the paper's cache[α, μ|α].
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from .cq import CQ
+from .clftj_ref import Plan
+from .db import Database
+from .frontier import Frontier, JaxTrieJoin, MAX_KEY_BITS
+from .td import TreeDecomposition
+
+_MIX = np.int64(-7046029254386353131)  # 0x9E3779B97F4A7C15 as signed
+
+
+def _pack_keys(assign: jnp.ndarray, idx: Tuple[int, ...],
+               node: int) -> jnp.ndarray:
+    """Pack <=2 adhesion columns + node id into one int64 key."""
+    key = jnp.full((assign.shape[0],), np.int64(node))
+    for i in idx:
+        key = (key << MAX_KEY_BITS) | assign[:, i].astype(jnp.int64)
+    return key
+
+
+def _hash_slots(keys: jnp.ndarray, n_slots: int) -> jnp.ndarray:
+    h = keys * _MIX
+    h = h ^ (h >> 29)
+    return jnp.abs(h) % n_slots
+
+
+@dataclass
+class CacheTable:
+    """Direct-mapped device cache (functional updates)."""
+
+    keys: jnp.ndarray   # (K,) int64
+    vals: jnp.ndarray   # (K,) int64
+    used: jnp.ndarray   # (K,) bool
+    hits: int = 0
+    misses: int = 0
+
+    @staticmethod
+    def create(n_slots: int) -> "CacheTable":
+        return CacheTable(keys=jnp.zeros((n_slots,), jnp.int64),
+                          vals=jnp.zeros((n_slots,), jnp.int64),
+                          used=jnp.zeros((n_slots,), bool))
+
+
+@jax.jit
+def _cache_probe(tkeys, tvals, tused, keys, active):
+    slots = _hash_slots(keys, tkeys.shape[0])
+    hit = active & tused[slots] & (tkeys[slots] == keys)
+    return hit, jnp.where(hit, tvals[slots], 0)
+
+
+@jax.jit
+def _cache_insert(tkeys, tvals, tused, keys, vals, active):
+    slots = jnp.where(active, _hash_slots(keys, tkeys.shape[0]), 0)
+    # duplicate slots: arbitrary winner (scatter drop-semantics), acceptable
+    tkeys = tkeys.at[slots].set(jnp.where(active, keys, tkeys[slots]))
+    tvals = tvals.at[slots].set(jnp.where(active, vals, tvals[slots]))
+    tused = tused.at[slots].set(tused[slots] | active)
+    return tkeys, tvals, tused
+
+
+@jax.jit
+def _dedup(keys: jnp.ndarray, active: jnp.ndarray):
+    """Unique active keys: returns (is_rep_sorted→orig layout helpers).
+
+    Returns (first_idx, rep_of_row, n_reps):
+      * ``first_idx[r]``   — row index of representative r (garbage for r >=
+        n_reps),
+      * ``rep_of_row[i]``  — representative id of row i (garbage if inactive),
+      * ``n_reps``         — number of distinct active keys.
+    """
+    C = keys.shape[0]
+    big = jnp.int64(2 ** 62)
+    k = jnp.where(active, keys, big)  # inactive rows sort to the back
+    order = jnp.argsort(k, stable=True)
+    ks = k[order]
+    isfirst = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    isfirst = isfirst & (ks != big)
+    rep_sorted = jnp.cumsum(isfirst.astype(jnp.int32)) - 1
+    n_reps = jnp.sum(isfirst.astype(jnp.int32))
+    rep_of_row = jnp.zeros((C,), jnp.int32).at[order].set(rep_sorted)
+    # first occurrence row index per rep (scatter-max; -1 writes are no-ops)
+    first_idx = jnp.zeros((C,), jnp.int32).at[
+        jnp.clip(rep_sorted, 0, C - 1)].max(
+        jnp.where(isfirst, order, -1).astype(jnp.int32))
+    return first_idx, rep_of_row, n_reps
+
+
+@jax.jit
+def _make_rep_frontier(F: Frontier, first_idx: jnp.ndarray,
+                       n_reps: jnp.ndarray) -> Frontier:
+    C = F.assign.shape[0]
+    rep_valid = jnp.arange(C, dtype=jnp.int32) < n_reps
+    src = jnp.clip(first_idx, 0, C - 1)
+    return Frontier(assign=F.assign[src],
+                    factor=jnp.where(rep_valid, 1, 0).astype(jnp.int64),
+                    valid=rep_valid,
+                    orig=jnp.arange(C, dtype=jnp.int32),
+                    lo=F.lo[src], hi=F.hi[src])
+
+
+@jax.jit
+def _apply_counts(F: Frontier, hit, hvals, rep_of_row, cnt) -> Frontier:
+    mult = jnp.where(hit, hvals, cnt[jnp.clip(rep_of_row, 0, cnt.shape[0] - 1)])
+    factor = F.factor * mult
+    return F._replace(factor=factor, valid=F.valid & (factor > 0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots",))
+def _segment_counts(exit_F: Frontier, n_slots: int) -> jnp.ndarray:
+    contrib = jnp.where(exit_F.valid, exit_F.factor, 0)
+    return jnp.zeros((n_slots,), jnp.int64).at[
+        jnp.clip(exit_F.orig, 0, n_slots - 1)].add(contrib)
+
+
+class JaxCachedTrieJoin(JaxTrieJoin):
+    """CLFTJ over the frontier engine.  ``cache_slots=0`` disables tier 2;
+    ``dedup=False`` disables tier 1 (then it degenerates to vanilla LFTJ with
+    per-subtree counting)."""
+
+    def __init__(self, q: CQ, td: TreeDecomposition, order: Sequence[str],
+                 db: Database, capacity: int = 1 << 17,
+                 cache_slots: int = 1 << 16, dedup: bool = True,
+                 impl: str = "bsearch",
+                 cached_nodes: Optional[frozenset] = None):
+        super().__init__(q, order, db, capacity=capacity, impl=impl)
+        self.plan = Plan.build(td, order)
+        self.td = td
+        self.cache_slots = int(cache_slots)
+        self.dedup = dedup
+        self.cached_nodes = cached_nodes
+        maxval = max((int(r.max()) if r.size else 0) for r in self.atom_rows)
+        if maxval >= (1 << MAX_KEY_BITS):
+            # keys would not pack into 64 bits — disable tier-2 caching
+            self.cache_slots = 0
+        self.tables: Dict[int, CacheTable] = {}
+        self.stats = {"tier1_rows_collapsed": 0, "tier2_hits": 0,
+                      "tier2_probes": 0, "subtree_launches": 0}
+
+    # -----------------------------------------------------------------
+    def _node_cacheable(self, v: int) -> bool:
+        if self.cached_nodes is not None and v not in self.cached_nodes:
+            return False
+        return len(self.plan.adhesion_idx[v]) <= 2
+
+    def _owned_depths(self, v: int) -> List[int]:
+        if v not in self.plan.first_d:
+            return []
+        return list(range(self.plan.first_d[v], self.plan.last_d[v] + 1))
+
+    # -----------------------------------------------------------------
+    def count(self) -> int:
+        with enable_x64():
+            total = 0
+            for exitF in self._run_node(self.td.root,
+                                        [self.initial_frontier()]):
+                total += int(jnp.sum(jnp.where(exitF.valid, exitF.factor, 0)))
+            return total
+
+    def _run_node(self, v: int, chunks: List[Frontier]) -> List[Frontier]:
+        """Expand node v's own vars, then fold each child subtree into
+        factors; returns chunks at depth subtree_last(v)+1."""
+        for d in self._owned_depths(v):
+            nxt: List[Frontier] = []
+            for F in chunks:
+                for piece in self.expand_chunks(F, d):
+                    if bool(piece.valid.any()):
+                        nxt.append(piece)
+            chunks = nxt
+        for c in self.td.children[v]:
+            chunks = [self._enter_child(c, F) for F in chunks]
+            chunks = [F for F in chunks if bool(F.valid.any())]
+        return chunks
+
+    def _enter_child(self, c: int, F: Frontier) -> Frontier:
+        """Paper Fig 2 lines 6-12 & 20-22, vectorized over the chunk."""
+        self.stats["subtree_launches"] += 1
+        C = self.capacity
+        adh = self.plan.adhesion_idx[c]
+        cacheable = self._node_cacheable(c)
+        use_t2 = cacheable and self.cache_slots > 0
+        use_t1 = self.dedup and cacheable
+
+        keys = _pack_keys(F.assign, adh, c) if cacheable else None
+        if use_t2:
+            table = self.tables.setdefault(
+                c, CacheTable.create(self.cache_slots))
+            hit, hvals = _cache_probe(table.keys, table.vals, table.used,
+                                      keys, F.valid)
+            self.stats["tier2_probes"] += int(jnp.sum(F.valid))
+            self.stats["tier2_hits"] += int(jnp.sum(hit))
+        else:
+            hit = jnp.zeros((C,), bool)
+            hvals = jnp.zeros((C,), jnp.int64)
+
+        active = F.valid & ~hit
+        if use_t1:
+            first_idx, rep_of_row, n_reps = _dedup(keys, active)
+            self.stats["tier1_rows_collapsed"] += int(
+                jnp.sum(active.astype(jnp.int32)) - n_reps)
+            R = _make_rep_frontier(F, first_idx, n_reps)
+        else:
+            # identity "dedup": every active row is its own representative
+            rep_of_row = jnp.arange(C, dtype=jnp.int32)
+            R = F._replace(factor=jnp.where(active, 1, 0).astype(jnp.int64),
+                           valid=active,
+                           orig=jnp.arange(C, dtype=jnp.int32))
+
+        cnt = jnp.zeros((C,), jnp.int64)
+        if bool(R.valid.any()):
+            for exitF in self._run_node(c, [R]):
+                cnt = cnt + _segment_counts(exitF, C)
+
+        if use_t2:
+            rep_keys = keys[jnp.clip(first_idx, 0, C - 1)] if use_t1 else keys
+            rep_active = (jnp.arange(C) < n_reps) if use_t1 else active
+            t = self.tables[c]
+            nk, nv, nu = _cache_insert(t.keys, t.vals, t.used,
+                                       rep_keys, cnt, rep_active)
+            self.tables[c] = CacheTable(nk, nv, nu)
+
+        return _apply_counts(F, hit, hvals, rep_of_row, cnt)
+
+
+def jax_clftj_count(q: CQ, td: TreeDecomposition, order: Sequence[str],
+                    db: Database, capacity: int = 1 << 17,
+                    cache_slots: int = 1 << 16, dedup: bool = True,
+                    impl: str = "bsearch") -> int:
+    return JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
+                             cache_slots=cache_slots, dedup=dedup,
+                             impl=impl).count()

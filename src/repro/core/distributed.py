@@ -1,0 +1,141 @@
+"""Distributed CLFTJ: a fully-jittable static pipeline + mesh execution.
+
+The host-driven engine (``cached_frontier``) splits morsels adaptively; for
+SPMD execution we instead fix the chunk capacity, unroll the TD recursion
+(it is static), and flag overflow instead of splitting.  The result is one
+pure function (frontier₀, cache tables) → (count, overflow, tables) that
+``shard_map``s across the mesh: each shard owns a contiguous slice of the
+top-level variable's candidate runs (the natural LFTJ work partition — see
+DESIGN.md §3), keeps a private cache (caching is an optimization, never a
+correctness requirement, so no coherence traffic), and the only collective
+is the final count psum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .cached_frontier import (JaxCachedTrieJoin, _apply_counts, _cache_insert,
+                              _cache_probe, _dedup, _make_rep_frontier,
+                              _pack_keys, _segment_counts)
+from .cq import CQ
+from .db import Database
+from .frontier import Frontier
+from .td import TreeDecomposition
+
+
+class StaticCLFTJ(JaxCachedTrieJoin):
+    """Jittable fixed-capacity CLFTJ (no host-side morsel splitting)."""
+
+    # -----------------------------------------------------------------
+    def count_fn(self):
+        """Returns a pure fn(frontier0) -> (count, overflow)."""
+
+        def fn(F0: Frontier):
+            tables = {c: (jnp.zeros((self.cache_slots,), jnp.int64),
+                          jnp.zeros((self.cache_slots,), jnp.int64),
+                          jnp.zeros((self.cache_slots,), bool))
+                      for c in range(self.td.num_nodes)
+                      if self.cache_slots > 0 and self._node_cacheable(c)}
+            exits, ov, tables = self._static_node(self.td.root, F0,
+                                                  jnp.zeros((), bool), tables)
+            total = jnp.sum(jnp.where(exits.valid, exits.factor, 0))
+            return total, ov
+
+        return fn
+
+    def _static_node(self, v: int, F: Frontier, ov, tables):
+        for d in self._owned_depths(v):
+            F, needed = self._expand_fn(d)(F)
+            ov = ov | (needed > self.capacity)
+        for c in self.td.children[v]:
+            F, ov, tables = self._static_child(c, F, ov, tables)
+        return F, ov, tables
+
+    def _static_child(self, c: int, F: Frontier, ov, tables):
+        C = self.capacity
+        adh = self.plan.adhesion_idx[c]
+        cacheable = self._node_cacheable(c)
+        use_t2 = cacheable and c in tables
+        use_t1 = self.dedup and cacheable
+
+        keys = _pack_keys(F.assign, adh, c) if cacheable else None
+        if use_t2:
+            tk, tv, tu = tables[c]
+            hit, hvals = _cache_probe(tk, tv, tu, keys, F.valid)
+        else:
+            hit = jnp.zeros((C,), bool)
+            hvals = jnp.zeros((C,), jnp.int64)
+        active = F.valid & ~hit
+        if use_t1:
+            first_idx, rep_of_row, n_reps = _dedup(keys, active)
+            R = _make_rep_frontier(F, first_idx, n_reps)
+        else:
+            rep_of_row = jnp.arange(C, dtype=jnp.int32)
+            R = F._replace(factor=jnp.where(active, 1, 0).astype(jnp.int64),
+                           valid=active,
+                           orig=jnp.arange(C, dtype=jnp.int32))
+        exits, ov, tables = self._static_node(c, R, ov, tables)
+        cnt = _segment_counts(exits, C)
+        if use_t2:
+            rep_keys = keys[jnp.clip(first_idx, 0, C - 1)] if use_t1 else keys
+            rep_active = (jnp.arange(C) < n_reps) if use_t1 else active
+            tables = dict(tables)
+            tables[c] = _cache_insert(*tables[c], rep_keys, cnt, rep_active)
+        return _apply_counts(F, hit, hvals, rep_of_row, cnt), ov, tables
+
+
+def make_distributed_count(q: CQ, td: TreeDecomposition,
+                           order: Sequence[str], db: Database, mesh: Mesh,
+                           capacity: int = 1 << 14,
+                           cache_slots: int = 1 << 15,
+                           axes: Tuple[str, ...] = ("data",)):
+    """Build (jitted_fn, engine).  ``jitted_fn()`` -> (count, overflow).
+
+    Work partition: shard i of D takes top-level guard runs
+    [i·R/D, (i+1)·R/D); relations are replicated (closure constants); the
+    final count is a psum over the mesh axes — the single collective.
+    """
+    eng = StaticCLFTJ(q, td, order, db, capacity=capacity,
+                      cache_slots=cache_slots)
+    g_ai, g_lvl = eng.at_depth[0][eng.guard[0]]
+    rs = eng.levels[g_ai][g_lvl].runstarts
+    nruns = rs.shape[0]
+    n_rows_g = eng.sizes[g_ai]
+    count_fn = eng.count_fn()
+    all_axes = tuple(a for a in axes if a in mesh.axis_names)
+    d_total = int(np.prod([mesh.shape[a] for a in all_axes]))
+
+    def per_shard():
+        with enable_x64():
+            idx = jnp.zeros((), jnp.int32)
+            mult = 1
+            for a in reversed(all_axes):
+                idx = idx + jax.lax.axis_index(a) * mult
+                mult *= mesh.shape[a]
+            r0 = (idx * nruns) // d_total
+            r1 = ((idx + 1) * nruns) // d_total
+            lo0 = jnp.where(r0 < nruns, rs[jnp.clip(r0, 0, nruns - 1)],
+                            n_rows_g).astype(jnp.int32)
+            hi0 = jnp.where(r1 < nruns, rs[jnp.clip(r1, 0, nruns - 1)],
+                            n_rows_g).astype(jnp.int32)
+            F0 = eng.initial_frontier()
+            F0 = F0._replace(
+                lo=F0.lo.at[0, g_ai].set(lo0),
+                hi=F0.hi.at[0, g_ai].set(hi0))
+            total, ov = count_fn(F0)
+            total = jax.lax.psum(total, all_axes)
+            ov = jax.lax.psum(ov.astype(jnp.int32), all_axes)
+            return total, ov
+
+    fn = shard_map(per_shard, mesh=mesh, in_specs=(),
+                   out_specs=(P(), P()), check_rep=False)
+    return jax.jit(fn), eng

@@ -1,0 +1,122 @@
+"""Public join-engine API: plan + execute CLFTJ/LFTJ/YTD on any backend.
+
+    from repro.core import engine
+    res = engine.count(q, db)                     # plans a TD, runs JAX CLFTJ
+    res = engine.count(q, db, algorithm="lftj")   # vanilla trie join
+    res = engine.count(q, db, backend="ref")      # paper-faithful host engines
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cq import CQ
+from .clftj_ref import CLFTJ, CachePolicy
+from .cached_frontier import JaxCachedTrieJoin
+from .db import Counters, Database
+from .decompose import choose_plan
+from .frontier import JaxTrieJoin
+from .lftj_ref import LFTJ
+from .td import TreeDecomposition
+from .yannakakis import YTD
+
+
+@dataclass
+class Result:
+    count: Optional[int]
+    tuples: Optional[np.ndarray]
+    algorithm: str
+    backend: str
+    order: Tuple[str, ...]
+    td: Optional[TreeDecomposition]
+    counters: Dict[str, int] = field(default_factory=dict)
+    wall_s: float = 0.0
+
+
+def plan_query(q: CQ, db: Optional[Database] = None,
+               max_adhesion: int = 2,
+               ) -> Tuple[TreeDecomposition, Tuple[str, ...]]:
+    stats = db.stats() if db is not None else None
+    return choose_plan(q, stats, max_adhesion=max_adhesion)
+
+
+def count(q: CQ, db: Database, algorithm: str = "clftj",
+          backend: str = "jax",
+          td: Optional[TreeDecomposition] = None,
+          order: Optional[Sequence[str]] = None,
+          policy: Optional[CachePolicy] = None,
+          capacity: int = 1 << 16, cache_slots: int = 1 << 16,
+          dedup: bool = True, impl: str = "bsearch") -> Result:
+    import time
+    t0 = time.perf_counter()
+    counters = Counters()
+    if td is None or order is None:
+        td_, order_ = plan_query(q, db)
+        td = td if td is not None else td_
+        order = order if order is not None else order_
+    order = tuple(order)
+    if algorithm == "clftj":
+        if backend == "jax":
+            eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
+                                    cache_slots=cache_slots, dedup=dedup,
+                                    impl=impl)
+            c = eng.count()
+            counters_out = dict(eng.stats)
+        else:
+            c = CLFTJ(q, td, order, db, policy, counters).count()
+            counters_out = counters.snapshot()
+    elif algorithm == "lftj":
+        if backend == "jax":
+            c = JaxTrieJoin(q, order, db, capacity=capacity,
+                            impl=impl).count()
+            counters_out = {}
+        else:
+            c = LFTJ(q, order, db, counters).count()
+            counters_out = counters.snapshot()
+    elif algorithm == "ytd":
+        c = YTD(q, td, db, counters).count()
+        counters_out = counters.snapshot()
+    else:
+        raise ValueError(algorithm)
+    return Result(count=c, tuples=None, algorithm=algorithm, backend=backend,
+                  order=order, td=td, counters=counters_out,
+                  wall_s=time.perf_counter() - t0)
+
+
+def evaluate(q: CQ, db: Database, algorithm: str = "clftj",
+             backend: str = "ref",
+             td: Optional[TreeDecomposition] = None,
+             order: Optional[Sequence[str]] = None,
+             policy: Optional[CachePolicy] = None,
+             capacity: int = 1 << 16, impl: str = "bsearch") -> Result:
+    import time
+    t0 = time.perf_counter()
+    counters = Counters()
+    if td is None or order is None:
+        td_, order_ = plan_query(q, db)
+        td = td if td is not None else td_
+        order = order if order is not None else order_
+    order = tuple(order)
+    if algorithm == "clftj":
+        rows = np.asarray(
+            list(CLFTJ(q, td, order, db, policy, counters).evaluate()),
+            dtype=np.int64).reshape(-1, len(order))
+    elif algorithm == "lftj":
+        if backend == "jax":
+            from .frontier import jax_lftj_evaluate
+            rows = jax_lftj_evaluate(q, order, db, capacity=capacity,
+                                     impl=impl)
+        else:
+            rows = np.asarray(list(LFTJ(q, order, db, counters).evaluate()),
+                              dtype=np.int64).reshape(-1, len(order))
+    elif algorithm == "ytd":
+        ytd_rows = YTD(q, td, db, counters).evaluate()
+        rows = np.asarray(ytd_rows, dtype=np.int64).reshape(-1, len(q.variables))
+    else:
+        raise ValueError(algorithm)
+    return Result(count=rows.shape[0], tuples=rows, algorithm=algorithm,
+                  backend=backend, order=order, td=td,
+                  counters=counters.snapshot(),
+                  wall_s=time.perf_counter() - t0)

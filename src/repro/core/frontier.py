@@ -1,0 +1,353 @@
+"""Vectorized (level-synchronous) trie join in JAX — the TPU-native LFTJ.
+
+See DESIGN.md §2.  The depth-first RJoin recursion of the paper's Figure 1 is
+re-derived as breadth-first *frontier expansion*: a frontier is a fixed
+capacity matrix of partial assignments (+ per-atom trie ranges); expanding
+variable ``x_d`` enumerates, for every row, the distinct candidate values of a
+*guard* atom (via precomputed run-start arrays — the columnar trie) and
+verifies membership in every other participating atom with batched bounded
+binary search (``kernels/leapfrog``).  The frontier after level d contains
+exactly the depth-d partial assignments LFTJ would visit, so worst-case
+optimality is inherited; the static chunk capacity bounds memory the way
+LFTJ's O(1)-per-path state does.
+
+Counting uses 64-bit factors; engine entry points run under an
+``enable_x64`` scope (the LM substrate stays 32-bit — the scope is local).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from ..kernels.leapfrog import ops as lf_ops
+from .cq import CQ
+from .db import Database
+
+MAX_KEY_BITS = 21  # packed adhesion keys: values must fit in 21 bits
+
+
+class Frontier(NamedTuple):
+    """One fixed-capacity chunk of partial assignments (a morsel)."""
+
+    assign: jnp.ndarray   # (C, n) int32  — assignment columns (valid prefix)
+    factor: jnp.ndarray   # (C,)  int64  — carried count factor (paper's f)
+    valid: jnp.ndarray    # (C,)  bool
+    orig: jnp.ndarray     # (C,)  int32  — origin row for segment aggregation
+    lo: jnp.ndarray       # (C, m) int32 — per-atom trie range start
+    hi: jnp.ndarray       # (C, m) int32 — per-atom trie range end
+
+
+@dataclass(frozen=True)
+class AtomLevel:
+    """Columnar trie level: value column + run-start index (CSR)."""
+
+    col: jnp.ndarray        # (N,) int32 — rows[:, level]
+    runstarts: jnp.ndarray  # (R,) int32 — positions where rows[:, :level+1] changes
+    col_np: np.ndarray
+    runstarts_np: np.ndarray
+
+
+def _build_levels(rows: np.ndarray) -> List[AtomLevel]:
+    n, k = rows.shape
+    levels = []
+    for l in range(k):
+        if n == 0:
+            rs = np.zeros(0, dtype=np.int32)
+        else:
+            prefix = rows[:, :l + 1]
+            change = np.ones(n, dtype=bool)
+            change[1:] = (prefix[1:] != prefix[:-1]).any(axis=1)
+            rs = np.flatnonzero(change).astype(np.int32)
+        col = rows[:, l].astype(np.int32)
+        levels.append(AtomLevel(jnp.asarray(col), jnp.asarray(rs), col, rs))
+    return levels
+
+
+class JaxTrieJoin:
+    """Vectorized LFTJ: count / evaluate a full CQ over a fixed order."""
+
+    def __init__(self, q: CQ, order: Sequence[str], db: Database,
+                 capacity: int = 1 << 17, impl: str = "bsearch"):
+        self.q = q
+        self.order = tuple(order)
+        self.n = len(self.order)
+        self.db = db
+        self.capacity = int(capacity)
+        self.impl = impl
+        pos = {x: i for i, x in enumerate(self.order)}
+
+        # per-atom tries, variables permuted into global order
+        self.atom_rows: List[np.ndarray] = []
+        self.atom_vars: List[Tuple[str, ...]] = []
+        for a in q.atoms:
+            uniq, first_col = [], {}
+            for c, v in enumerate(a.vars):
+                if v not in first_col:
+                    first_col[v] = c
+                    uniq.append(v)
+            ordered = tuple(sorted(uniq, key=pos.get))
+            rows = db.relations[a.relation]
+            for c, v in enumerate(a.vars):
+                if first_col[v] != c:
+                    rows = rows[rows[:, c] == rows[:, first_col[v]]]
+            rows = np.unique(rows[:, [first_col[v] for v in ordered]], axis=0)
+            if rows.size and int(rows.max()) >= (1 << 31) - 1:
+                raise ValueError("values must fit int32")
+            self.atom_rows.append(rows.astype(np.int64))
+            self.atom_vars.append(ordered)
+        self.m = len(q.atoms)
+        self.levels: List[List[AtomLevel]] = [
+            _build_levels(r) for r in self.atom_rows]
+        self.sizes = [r.shape[0] for r in self.atom_rows]
+
+        # participants per depth; guard = the atom whose trie has the
+        # DEEPEST bound prefix (most selective sibling list — LFTJ's seek
+        # discipline), tie-broken by smaller relation.  Choosing by relation
+        # size alone can pick an unconstrained level-0 iterator and blow the
+        # frontier up by the whole value domain (§Perf join iteration log).
+        self.at_depth: List[List[Tuple[int, int]]] = []
+        self.guard: List[int] = []
+        for x in self.order:
+            parts = [(ai, self.atom_vars[ai].index(x))
+                     for ai in range(self.m) if x in self.atom_vars[ai]]
+            assert parts, f"variable {x} not covered"
+            self.at_depth.append(parts)
+            scores = [lvl * (1 << 40) - self.sizes[ai] for ai, lvl in parts]
+            self.guard.append(int(np.argmax(scores)))
+        self._expand_jits: Dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+    def initial_frontier(self) -> Frontier:
+        C, n, m = self.capacity, self.n, self.m
+        lo = jnp.zeros((C, m), jnp.int32)
+        hi = jnp.zeros((C, m), jnp.int32).at[0, :].set(
+            jnp.asarray(self.sizes, jnp.int32))
+        return Frontier(
+            assign=jnp.zeros((C, n), jnp.int32),
+            factor=jnp.zeros((C,), jnp.int64).at[0].set(1),
+            valid=jnp.zeros((C,), bool).at[0].set(True),
+            orig=jnp.zeros((C,), jnp.int32),
+            lo=lo, hi=hi)
+
+    # ------------------------------------------------------------------
+    def _expand_fn(self, d: int):
+        """Return a callable running the (module-level, jit-cached)
+        expansion step for depth d."""
+        if d in self._expand_jits:
+            return self._expand_jits[d]
+        parts = self.at_depth[d]
+        gi = self.guard[d]
+        g_ai, g_lvl = parts[gi]
+        g = self.levels[g_ai][g_lvl]
+        others = tuple((ai, lvl) for k, (ai, lvl) in enumerate(parts)
+                       if k != gi)
+        other_cols = tuple(self.levels[ai][lvl].col for ai, lvl in others)
+        other_ais = tuple(ai for ai, _ in others)
+
+        def fn(F: Frontier):
+            return _expand_step(F, g.col, g.runstarts, other_cols,
+                                d=d, g_ai=g_ai, other_ais=other_ais,
+                                n_rows_g=self.sizes[g_ai], impl=self.impl)
+
+        self._expand_jits[d] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    def _counts_for(self, F: Frontier, d: int) -> np.ndarray:
+        """Host-side distinct-candidate counts (for morsel splitting)."""
+        parts = self.at_depth[d]
+        g_ai, g_lvl = parts[self.guard[d]]
+        rs = self.levels[g_ai][g_lvl].runstarts_np
+        lo = np.asarray(F.lo[:, g_ai])
+        hi = np.asarray(F.hi[:, g_ai])
+        valid = np.asarray(F.valid)
+        r0 = np.searchsorted(rs, lo, side="left")
+        r1 = np.searchsorted(rs, hi, side="left")
+        return np.where(valid, r1 - r0, 0).astype(np.int64)
+
+    def _split_chunk(self, F: Frontier, d: int,
+                     counts: np.ndarray) -> List[Frontier]:
+        """Split a chunk whose expansion would overflow capacity.
+
+        Rows are greedily packed into pieces whose total candidate count fits;
+        a single oversized row is split by guard *run ranges* (host side), so
+        each piece enumerates a disjoint slice of its candidate values.
+        """
+        C = self.capacity
+        parts = self.at_depth[d]
+        g_ai, g_lvl = parts[self.guard[d]]
+        rs = self.levels[g_ai][g_lvl].runstarts_np
+        n_rows_g = self.sizes[g_ai]
+        host = {k: np.asarray(v) for k, v in F._asdict().items()}
+        rows: List[Dict[str, np.ndarray]] = []
+        for i in np.flatnonzero(host["valid"]):
+            c = int(counts[i])
+            if c <= C:
+                rows.append({k: v[i] for k, v in host.items()})
+                continue
+            # oversized: split the guard run range
+            lo_i, hi_i = int(host["lo"][i, g_ai]), int(host["hi"][i, g_ai])
+            r0 = int(np.searchsorted(rs, lo_i, side="left"))
+            r1 = int(np.searchsorted(rs, hi_i, side="left"))
+            for a in range(r0, r1, C):
+                b = min(a + C, r1)
+                piece = {k: v[i].copy() for k, v in host.items()}
+                piece["lo"] = piece["lo"].copy()
+                piece["hi"] = piece["hi"].copy()
+                piece["lo"][g_ai] = rs[a]
+                piece["hi"][g_ai] = rs[b] if b < len(rs) else n_rows_g
+                rows.append(piece)
+        # greedy pack rows into pieces
+        pieces: List[Frontier] = []
+        cur: List[Dict[str, np.ndarray]] = []
+        cur_count = 0
+
+        def flush():
+            nonlocal cur, cur_count
+            if not cur:
+                return
+            pieces.append(self._pack_rows(cur))
+            cur, cur_count = [], 0
+
+        for r in rows:
+            lo_r, hi_r = int(r["lo"][g_ai]), int(r["hi"][g_ai])
+            c = int(np.searchsorted(rs, hi_r) - np.searchsorted(rs, lo_r))
+            if cur and (cur_count + c > C or len(cur) == C):
+                flush()
+            cur.append(r)
+            cur_count += c
+        flush()
+        return pieces
+
+    def _pack_rows(self, rows: List[Dict[str, np.ndarray]]) -> Frontier:
+        C = self.capacity
+        out = {}
+        for k in Frontier._fields:
+            proto = rows[0][k]
+            arr = np.zeros((C,) + proto.shape, dtype=proto.dtype)
+            for i, r in enumerate(rows):
+                arr[i] = r[k]
+            out[k] = jnp.asarray(arr)
+        out["valid"] = jnp.asarray(
+            np.arange(C) < len(rows)) & out["valid"].astype(bool)
+        return Frontier(**out)
+
+    # ------------------------------------------------------------------
+    def expand_chunks(self, F: Frontier, d: int) -> List[Frontier]:
+        """Expand chunk F at depth d into >= 1 compacted chunks at d+1."""
+        counts = self._counts_for(F, d)
+        needed = int(counts.sum())
+        fn = self._expand_fn(d)
+        if needed <= self.capacity:
+            out, _ = fn(F)
+            return [out]
+        pieces = self._split_chunk(F, d, counts)
+        return [fn(p)[0] for p in pieces]
+
+    # ------------------------------------------------------------------
+    def count(self) -> int:
+        with enable_x64():
+            total = 0
+            stack: List[Tuple[int, Frontier]] = [(0, self.initial_frontier())]
+            while stack:
+                d, F = stack.pop()
+                if d == self.n:
+                    total += int(jnp.sum(
+                        jnp.where(F.valid, F.factor, 0)))
+                    continue
+                for piece in self.expand_chunks(F, d):
+                    if bool(piece.valid.any()):
+                        stack.append((d + 1, piece))
+            return total
+
+    def evaluate(self) -> Iterator[np.ndarray]:
+        """Yields (k, n) blocks of result assignments (order columns)."""
+        with enable_x64():
+            stack: List[Tuple[int, Frontier]] = [(0, self.initial_frontier())]
+            while stack:
+                d, F = stack.pop()
+                if d == self.n:
+                    mask = np.asarray(F.valid)
+                    if mask.any():
+                        yield np.asarray(F.assign)[mask]
+                    continue
+                for piece in self.expand_chunks(F, d):
+                    if bool(piece.valid.any()):
+                        stack.append((d + 1, piece))
+
+
+@jax.jit
+def _compact(F: Frontier) -> Frontier:
+    """Stable-partition valid rows to the front of the chunk."""
+    perm = jnp.argsort(jnp.logical_not(F.valid), stable=True)
+    return Frontier(*(x[perm] for x in F))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d", "g_ai", "other_ais", "n_rows_g", "impl"))
+def _expand_step(F: Frontier, g_col, g_rs, other_cols, *, d: int, g_ai: int,
+                 other_ais: Tuple[int, ...], n_rows_g: int, impl: str):
+    """One frontier expansion (module-level so the jit cache is shared by
+    every engine instance with the same query structure / array shapes)."""
+    C = F.assign.shape[0]
+    nruns = g_rs.shape[0]
+    r0 = jnp.searchsorted(g_rs, F.lo[:, g_ai], side="left")
+    r1 = jnp.searchsorted(g_rs, F.hi[:, g_ai], side="left")
+    counts = jnp.where(F.valid, r1 - r0, 0).astype(jnp.int32)
+    offsets = jnp.cumsum(counts) - counts               # exclusive
+    needed = offsets[-1] + counts[-1]
+    slot = jnp.arange(C, dtype=jnp.int32)
+    src = jnp.searchsorted(offsets, slot, side="right") - 1
+    src = jnp.clip(src, 0, C - 1)
+    delta = slot - offsets[src]
+    ok = (slot < needed) & (delta < counts[src])
+    if nruns:
+        k = jnp.clip(r0[src] + delta, 0, nruns - 1)
+        pos = g_rs[k]
+        value = g_col[jnp.clip(pos, 0, max(n_rows_g - 1, 0))]
+        run_end = jnp.where(k + 1 < nruns,
+                            g_rs[jnp.clip(k + 1, 0, nruns - 1)],
+                            n_rows_g).astype(jnp.int32)
+    else:
+        k = jnp.zeros_like(slot)
+        pos = jnp.zeros_like(slot)
+        value = jnp.zeros_like(slot)
+        run_end = jnp.zeros_like(slot)
+        ok = ok & False
+    lo2 = F.lo[src].at[:, g_ai].set(pos)
+    hi2 = F.hi[src].at[:, g_ai].set(run_end)
+    for ai, col in zip(other_ais, other_cols):
+        s = lf_ops.lower_bound(col, value, F.lo[src, ai], F.hi[src, ai],
+                               impl=impl)
+        e = lf_ops.upper_bound(col, value, s, F.hi[src, ai], impl=impl)
+        ok = ok & (s < e)
+        lo2 = lo2.at[:, ai].set(s.astype(jnp.int32))
+        hi2 = hi2.at[:, ai].set(e.astype(jnp.int32))
+    assign2 = F.assign[src].at[:, d].set(value.astype(jnp.int32))
+    out = Frontier(assign=assign2, factor=F.factor[src], valid=ok,
+                   orig=F.orig[src], lo=lo2.astype(jnp.int32),
+                   hi=hi2.astype(jnp.int32))
+    return _compact(out), needed
+
+
+def jax_lftj_count(q: CQ, order: Sequence[str], db: Database,
+                   capacity: int = 1 << 17, impl: str = "bsearch") -> int:
+    return JaxTrieJoin(q, order, db, capacity=capacity, impl=impl).count()
+
+
+def jax_lftj_evaluate(q: CQ, order: Sequence[str], db: Database,
+                      capacity: int = 1 << 17,
+                      impl: str = "bsearch") -> np.ndarray:
+    eng = JaxTrieJoin(q, order, db, capacity=capacity, impl=impl)
+    blocks = list(eng.evaluate())
+    if not blocks:
+        return np.zeros((0, len(eng.order)), np.int32)
+    return np.concatenate(blocks, axis=0)

@@ -1,0 +1,119 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA).
+
+Classic FlashAttention-2 schedule adapted to the TPU grid model: the grid is
+(batch·kv_head, q_blocks, kv_blocks) with the kv dimension iterated
+sequentially (TPU grids execute minor-to-major in order), so the running
+max/sum/accumulator live in VMEM scratch across kv steps.  Blocks are
+(BQ, Dh) / (BK, Dh) tiles; Dh (128 for every assigned arch) is already a
+lane multiple.
+
+The q tensor is pre-reshaped to (B·Hkv, G, T, Dh) — grouped-query heads ride
+in the G dimension of the block so each kv block is loaded once per group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, seq_k: int, causal: bool,
+                  window: Optional[int], q_offset: int, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]              # (G, BQ, Dh)
+    k = k_ref[0]              # (BK, Dh)
+    v = v_ref[0]              # (BK, Dh)
+    s = jnp.einsum("gqd,kd->gqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_q, block_k), 1)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_q, block_k), 2)
+    mask = kpos < seq_k
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (G, BQ)
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[..., None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "gqk,kd->gqd", p, v.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           q_offset: int = 0,
+                           block_q: int = DEFAULT_BQ,
+                           block_k: int = DEFAULT_BK,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (B, T, H, Dh); k/v: (B, S, Hkv, Dh).  Returns (B, T, H, Dh)."""
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    assert h % hkv == 0
+    g = h // hkv
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    # (B*Hkv, G, T, Dh) so one kv block serves the whole query group
+    qg = q.reshape(b, t, hkv, g, dh).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * hkv, g, t, dh)
+    kg = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, dh)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, dh)
+    grid = (b * hkv, pl.cdiv(t, block_q), pl.cdiv(s, block_k))
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_k=s,
+        causal=causal, window=window, q_offset=q_offset,
+        scale=1.0 / (dh ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, block_q, dh),
+                         lambda bh, qi, kj: (bh, 0, qi, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda bh, qi, kj: (bh, kj, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda bh, qi, kj: (bh, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, block_q, dh),
+                               lambda bh, qi, kj: (bh, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, t, dh), q.dtype),
+        scratch_shapes=[
+            # (G, BQ) running max / sum and (G, BQ, Dh) accumulator in VMEM
+            pltpu.VMEM((g, block_q), jnp.float32),
+            pltpu.VMEM((g, block_q), jnp.float32),
+            pltpu.VMEM((g, block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.reshape(b, hkv, g, t, dh).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, t, h, dh)

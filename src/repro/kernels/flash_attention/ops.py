@@ -1,0 +1,121 @@
+"""Attention dispatch: XLA flash-scan (default on CPU / in the dry-run),
+Pallas kernel (TPU target, interpret-validated), naive reference (tests).
+
+The XLA path is a blockwise online-softmax identical in structure to the
+Pallas kernel (double lax.scan over q/kv blocks), so its memory stays
+O(T·block) — required for the 32k-prefill dry-run cells to fit — and XLA's
+cost analysis sees the same FLOPs the kernel would execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as fa
+from . import ref
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_k", "unroll"))
+def flash_attention_xla(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, q_offset: int = 0,
+                        block_q: int = 512, block_k: int = 1024,
+                        unroll: bool = False):
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    nq = -(-t // block_q)
+    nk = -(-s // block_k)
+    tp, sp = nq * block_q, nk * block_k
+    qg = jnp.pad(q, ((0, 0), (0, tp - t), (0, 0), (0, 0))) \
+        .reshape(b, nq, block_q, hkv, g, dh).astype(jnp.float32)
+    kg = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0))) \
+        .reshape(b, nk, block_k, hkv, dh).astype(jnp.float32) \
+        .transpose(1, 0, 2, 3, 4)       # (nk, B, BK, Hkv, Dh) for lax.scan
+    vg = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0))) \
+        .reshape(b, nk, block_k, hkv, dh).astype(jnp.float32) \
+        .transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / (dh ** 0.5)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                      # (B, BQ, Hkv, G, Dh)
+        qpos = q_offset + qidx * block_q + jnp.arange(block_q)
+
+        @jax.checkpoint
+        def kv_step(carry, kv):
+            m_p, l_p, acc = carry
+            kblk, vblk, kidx = kv
+            kpos = kidx * block_k + jnp.arange(block_k)
+            sc = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk) * scale
+            mask = (kpos[None, :] < s)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_c = jnp.maximum(m_p, sc.max(-1))
+            alpha = jnp.exp(m_p - m_c)
+            p = jnp.exp(sc - m_c[..., None])
+            l_c = l_p * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk)
+            return (m_c, l_c, acc), None
+
+        init = (jnp.full((b, hkv, g, block_q), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, block_q), jnp.float32),
+                jnp.zeros((b, hkv, g, block_q, dh), jnp.float32))
+        if unroll:   # cost-probe mode (launch/costprobe.py)
+            carry = init
+            for j in range(nk):
+                carry, _ = kv_step(carry, (kg[j], vg[j], jnp.asarray(j)))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, init, (kg, vg, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,Hkv,G,BQ,Dh)
+        return None, out
+
+    # remat both scan bodies: backward recomputes (BQ, BK) score blocks
+    # instead of saving the full (T, S) score tensor — the flash property
+    # must survive autodiff, not just the forward pass.
+    qg_t = qg.transpose(1, 0, 2, 3, 4, 5)
+    if unroll:
+        blocks = jnp.stack([q_step(None, (qg_t[i], jnp.asarray(i)))[1]
+                            for i in range(nq)])
+    else:
+        _, blocks = jax.lax.scan(jax.checkpoint(q_step), None,
+                                 (qg_t, jnp.arange(nq)))
+    # blocks: (nq, B, Hkv, G, BQ, Dh) -> (B, T, H, Dh)
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(b, tp, h, dh)[:, :t]
+    return out.astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    impl: str = "xla", **kw):
+    if impl == "xla_unroll":
+        # cost-probe mode: big blocks (identical FLOPs, far fewer inlined
+        # block bodies — compile time at 32k prefill would explode at the
+        # production 512-block tiling)
+        kw.setdefault("block_q", 4096)
+        kw.setdefault("block_k", 4096)
+        return flash_attention_xla(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, unroll=True, **kw)
+    if impl == "xla":
+        return flash_attention_xla(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, **kw)
+    if impl == "pallas":
+        return fa.flash_attention_pallas(q, k, v, causal=causal,
+                                         window=window, q_offset=q_offset,
+                                         **kw)
+    if impl == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset)
+    raise ValueError(impl)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (naive full-matrix softmax attention).
+
+Shapes: q (B, T, H, Dh); k, v (B, S, Hkv, Dh) with H % Hkv == 0 (GQA).
+``window``: optional sliding-window size W — query at absolute position p
+may attend to keys in (p - W, p] (plus causality).  ``q_offset`` gives the
+absolute position of q[0] (decode / chunked prefill).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    assert h % hkv == 0
+    g = h // hkv
+    qq = q.reshape(b, t, hkv, g, dh).astype(jnp.float32)
+    kk = k.astype(jnp.float32)
+    vv = v.astype(jnp.float32)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qq, kk) / jnp.sqrt(dh)
+    qpos = q_offset + jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jnp.softmax(scores, axis=-1) if hasattr(jnp, "softmax") else \
+        jnp.exp(scores - scores.max(-1, keepdims=True)) / \
+        jnp.exp(scores - scores.max(-1, keepdims=True)).sum(-1, keepdims=True)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, vv)
+    return out.reshape(b, t, h, dh).astype(q.dtype)

@@ -1,0 +1,62 @@
+"""Jit'd wrappers for batched bounded search with implementation dispatch.
+
+``impl``:
+  * "bsearch" — branchless fixed-trip binary search (production path on
+    CPU/host and the default inside the frontier engine),
+  * "pallas"  — the TPU dense-count kernel (interpret mode on CPU),
+  * "ref"     — the dense jnp oracle (tests).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import leapfrog, ref
+
+
+@functools.partial(jax.jit, static_argnames=("strict",))
+def _bsearch(col: jnp.ndarray, values: jnp.ndarray, lo: jnp.ndarray,
+             hi: jnp.ndarray, strict: bool = True) -> jnp.ndarray:
+    """Vectorized bounded binary search; log2(N)+1 fixed iterations."""
+    n = col.shape[0]
+    if n == 0:
+        return lo
+    trips = max(1, int(math.ceil(math.log2(n + 1))) + 1)
+    dtype = lo.dtype
+
+    def body(_, lh):
+        lo_, hi_ = lh
+        go = lo_ < hi_
+        mid = (lo_ + hi_) >> 1
+        x = col[jnp.clip(mid, 0, n - 1)]
+        pred = (x < values) if strict else (x <= values)
+        lo2 = jnp.where(go & pred, mid + 1, lo_)
+        hi2 = jnp.where(go & ~pred, mid, hi_)
+        return lo2, hi2
+
+    lo_, _ = jax.lax.fori_loop(0, trips, body, (lo.astype(dtype),
+                                                hi.astype(dtype)))
+    return lo_
+
+
+def lower_bound(col, values, lo, hi, impl: str = "bsearch"):
+    if impl == "bsearch":
+        return _bsearch(col, values, lo, hi, strict=True)
+    if impl == "pallas":
+        return leapfrog.lower_bound_pallas(col, values, lo, hi)
+    if impl == "ref":
+        return ref.lower_bound_ref(col, values, lo, hi)
+    raise ValueError(impl)
+
+
+def upper_bound(col, values, lo, hi, impl: str = "bsearch"):
+    if impl == "bsearch":
+        return _bsearch(col, values, lo, hi, strict=False)
+    if impl == "pallas":
+        return leapfrog.upper_bound_pallas(col, values, lo, hi)
+    if impl == "ref":
+        return ref.upper_bound_ref(col, values, lo, hi)
+    raise ValueError(impl)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the batched leapfrog-seek (bounded searchsorted).
+
+``lower_bound(col, v, lo, hi)`` = the least index p in [lo, hi] such that all
+elements of col[lo:p] are < v (i.e. the insertion point of v restricted to the
+window).  The oracle computes it by dense masked counting — O(M·N), obviously
+correct, used to validate both the production binary search and the Pallas
+kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lower_bound_ref(col: jnp.ndarray, values: jnp.ndarray,
+                    lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    n = col.shape[0]
+    pos = jnp.arange(n, dtype=lo.dtype)[None, :]
+    mask = (pos >= lo[:, None]) & (pos < hi[:, None]) & \
+        (col[None, :] < values[:, None])
+    return lo + jnp.sum(mask.astype(lo.dtype), axis=1)
+
+
+def upper_bound_ref(col: jnp.ndarray, values: jnp.ndarray,
+                    lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    n = col.shape[0]
+    pos = jnp.arange(n, dtype=lo.dtype)[None, :]
+    mask = (pos >= lo[:, None]) & (pos < hi[:, None]) & \
+        (col[None, :] <= values[:, None])
+    return lo + jnp.sum(mask.astype(lo.dtype), axis=1)

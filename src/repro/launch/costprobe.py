@@ -1,0 +1,73 @@
+"""Scan-corrected cost extraction (two-point unrolled probe).
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, regardless of
+trip count (verified empirically — see EXPERIMENTS.md §Perf, iteration 0),
+so any scanned-layers model under-reports FLOPs/bytes/collectives by ~the
+layer count.  The probe lowers two *fully unrolled* reduced-depth variants
+of the same cell (depth = pattern+rem and 2·pattern+rem, every inner scan
+unrolled via ``cfg.cost_exact``) at the same mesh/shardings, then
+extrapolates linearly in the group count:
+
+    C(full) = C(base) + (n_groups - 1) · (C(base+1group) - C(base))
+
+which is exact for homogeneous group stacks (and for whisper, whose encoder
+layer count equals its decoder group count, the encoder scales alongside).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from ..configs.base import ArchConfig
+from . import roofline as rl
+
+
+def _probe_cfg(cfg: ArchConfig, groups: int) -> ArchConfig:
+    p = len(cfg.pattern)
+    nl = groups * p + cfg.n_rem_layers
+    kw = dict(n_layers=nl, cost_exact=True)
+    if cfg.encoder_decoder:
+        assert cfg.n_encoder_layers == cfg.n_groups, \
+            "enc-dec probe assumes encoder layers == decoder groups"
+        kw["n_encoder_layers"] = groups
+    return dataclasses.replace(cfg, **kw)
+
+
+def _costs(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    per_op = rl.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            **{f"coll_{k}": float(v) for k, v in per_op.items()}}
+
+
+def probe_costs(cfg: ArchConfig, case, mesh, build_lowered) -> Dict:
+    """Returns extrapolated per-device totals for the full-depth cell.
+
+    Attention-free archs (family == "ssm") at long sequence: every cost
+    component is exactly linear in T (token mixing is chunk-local with a
+    fixed chunk), so the probe runs at a reduced sequence and scales by
+    T/T_probe — unrolling tens of thousands of chunk bodies would otherwise
+    dominate compile time.
+    """
+    scale = 1.0
+    if cfg.family == "ssm" and case.kind != "decode" and case.seq > 4096:
+        import dataclasses as _dc
+        scale = case.seq / 4096
+        case = _dc.replace(case, seq=4096)
+    c1 = _costs(build_lowered(_probe_cfg(cfg, 1), case, mesh,
+                              microbatches=1).compile())
+    c2 = _costs(build_lowered(_probe_cfg(cfg, 2), case, mesh,
+                              microbatches=1).compile())
+    n_groups = cfg.n_groups
+    out = {}
+    for k in c1:
+        delta = c2[k] - c1[k]
+        out[k] = (c1[k] + max(n_groups - 1, 0) * delta) * scale
+    per_op = {k[len("coll_"):]: v for k, v in out.items()
+              if k.startswith("coll_")}
+    return {"flops": out["flops"], "bytes": out["bytes"],
+            "collectives": per_op, "seq_scale": scale,
+            "probe_points": {"one_group": c1, "two_groups": c2}}

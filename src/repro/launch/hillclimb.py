@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("DRYRUN_DEVICES", "512")).strip()
+# ^ must precede every other import: jax locks the device count on first init.
+"""Perf hillclimbing over dry-run cells: lower named variants of a cell and
+report roofline-term deltas (hypothesis -> change -> before/after is logged
+into EXPERIMENTS.md §Perf from this output).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell minitron-8b:train_4k
+"""
+import argparse
+import dataclasses
+import functools
+import json
+
+from ..configs import get_arch
+from ..models import Model
+from . import roofline as rl
+from .costprobe import probe_costs
+from .dryrun import build_lowered
+from .mesh import make_production_mesh
+from .shapes import SHAPES
+
+
+def measure(cfg, case, mesh, microbatches=8, grad_dtype="float32",
+            fsdp="zero3", srules=None):
+    from ..sharding import rules as shr
+    srules_override = None
+    if srules == "fsdp":
+        srules_override = shr.FSDP_RULES
+    elif srules == "moe":
+        srules_override = shr.MOE_SERVE_RULES
+    elif srules == "tp":
+        srules_override = dict(shr.DEFAULT_RULES)
+    build = functools.partial(build_lowered, grad_dtype=grad_dtype,
+                              fsdp=fsdp, srules_override=srules_override)
+    compiled = build(cfg, case, mesh, microbatches=microbatches).compile()
+    mem = compiled.memory_analysis()
+    pc = probe_costs(cfg, case, mesh,
+                     lambda c, cs, m, microbatches=1: build(
+                         c, cs, m, microbatches=microbatches))
+    roof = rl.Roofline(
+        flops=pc["flops"], bytes_accessed=pc["bytes"],
+        coll_bytes=rl.weighted_collective_bytes(pc["collectives"]),
+        per_op={k: int(v) for k, v in pc["collectives"].items()},
+        n_devices=mesh.size,
+        model_flops_per_device=rl.model_flops(cfg, case, mesh.size))
+    return {
+        "temp_gib": mem.temp_size_in_bytes / 2 ** 30,
+        "arg_gib": mem.argument_size_in_bytes / 2 ** 30,
+        **roof.as_dict(),
+    }
+
+
+VARIANTS = {
+    "train": [
+        ("baseline(mb8,zero3,remat=full)", {}),
+        ("tp_only", {"fsdp": "tp"}),
+        ("zero1", {"fsdp": "zero1"}),
+        ("zero1+seq_shard", {"fsdp": "zero1",
+                             "cfg": {"seq_shard": True}}),
+        ("zero1+seq_shard+grad_bf16",
+         {"fsdp": "zero1", "cfg": {"seq_shard": True},
+          "grad_dtype": "bfloat16"}),
+        ("seq_shard(zero3)", {"cfg": {"seq_shard": True}}),
+        ("mb16", {"microbatches": 16}),
+        ("remat_dots", {"cfg": {"remat_policy": "dots"}}),
+    ],
+    "moe": [
+        ("baseline(mb8,fsdp)", {}),
+        ("seq_shard", {"cfg": {"seq_shard": True}}),
+        ("mb16", {"microbatches": 16}),
+        ("capacity1.0", {"cfg": {"capacity_factor": 1.0}}),
+        ("zero3_outdim(mlp over data)", {"fsdp": "zero3_outdim"}),
+        ("zero3_outdim+seq_shard", {"fsdp": "zero3_outdim",
+                                    "cfg": {"seq_shard": True}}),
+        ("seq_shard+cap1.0+bf16",
+         {"cfg": {"seq_shard": True, "capacity_factor": 1.0},
+          "grad_dtype": "bfloat16"}),
+    ],
+    "serve": [
+        ("baseline(auto rules)", {}),
+        ("zero_inference(weight-gather)", {"srules": "fsdp"}),
+        ("expert_data(a2a tokens)", {"srules": "moe"}),
+        ("tp_only", {"srules": "tp"}),
+    ],
+}
+
+_SRULES = {"fsdp": "FSDP_RULES", "moe": "MOE_SERVE_RULES", "tp": "DEFAULT"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="<arch>:<shape>, e.g. minitron-8b:train_4k")
+    ap.add_argument("--set", default="train", choices=list(VARIANTS))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    base_cfg = get_arch(arch)
+    case = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    results = []
+    for name, spec in VARIANTS[args.set]:
+        if spec is None:
+            continue
+        cfg = dataclasses.replace(base_cfg, **spec.get("cfg", {}))
+        kw = {k: v for k, v in spec.items() if k != "cfg"}
+        print(f"[hillclimb] {args.cell} :: {name} ...", flush=True)
+        try:
+            m = measure(cfg, case, mesh, **kw)
+        except Exception as e:
+            print(f"  error: {e}")
+            results.append({"variant": name, "error": str(e)[:500]})
+            continue
+        results.append({"variant": name, **m})
+        print(f"  compute {m['compute_s']:.4f}s  memory {m['memory_s']:.4f}s"
+              f"  coll {m['collective_s']:.4f}s  temp {m['temp_gib']:.1f}GiB"
+              f"  dom={m['dominant']}  frac={m['roofline_fraction']:.3f}",
+              flush=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md tables from dryrun_results.json.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def _gib(b) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(rows: List[Dict], mesh: str) -> str:
+    out = ["| arch | shape | status | args GiB/dev | temp GiB/dev | "
+           "compile s | dominant collective |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                       f"| — | — | — | {r.get('reason', '')[:40]} |")
+            continue
+        coll = r["roofline"]["collectives"]
+        dom_c = max(coll, key=coll.get) if any(coll.values()) else "none"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {_gib(r['memory']['argument_bytes'])} "
+            f"| {_gib(r['memory']['temp_bytes'])} "
+            f"| {r['compile_s']} | {dom_c} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[Dict], mesh: str = "single") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | **{rf['dominant']}** "
+            f"| {rf['useful_flop_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def summary(rows: List[Dict]) -> str:
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    er = sum(1 for r in rows if r["status"] == "error")
+    return (f"{len(rows)} cells: {ok} compiled ok, {sk} skipped "
+            f"(long_500k on full-attention archs), {er} errors")
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    rows = json.load(open(path))
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("## Summary\n")
+    print(summary(rows))
+    print("\n## Dry-run (single-pod 16x16 = 256 chips)\n")
+    print(dryrun_table(rows, "single"))
+    print("\n## Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+    print(dryrun_table(rows, "multi"))
+    print("\n## Roofline (single-pod, scan-corrected)\n")
+    print(roofline_table(rows, "single"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Roofline-term extraction from AOT-compiled artifacts (no hardware).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+* compute term    = HLO_FLOPs / peak            (cost_analysis FLOPs; the
+                    compiled module is the per-device SPMD program, so terms
+                    are seconds-per-step-per-device)
+* memory term     = HLO_bytes / HBM_bw          (cost_analysis bytes accessed)
+* collective term = Σ collective bytes / ICI_bw (parsed from optimized HLO;
+                    shapes in the partitioned module are per-device shards;
+                    ring all-reduce weighted 2x for its two passes)
+
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = routed-active params —
+the ratio MODEL_FLOPS/HLO_FLOPs exposes remat and padding waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_DONE_RE = re.compile(r"-(done|update)\(")
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective byte totals (result-shape bytes, per device)."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if _DONE_RE.search(line):
+            continue  # async -done/-update: already counted at -start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        typestr, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(typestr)
+    return out
+
+
+def weighted_collective_bytes(per_op: Dict[str, int]) -> float:
+    w = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+    return sum(per_op[k] * w[k] for k in per_op)
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    per_op: Dict[str, int]
+    n_devices: int
+    model_flops_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return (self.model_flops_per_device / self.flops) if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at its
+        dominant-term speed: (useful FLOPs / peak) / bound time."""
+        if self.bound_s == 0:
+            return 0.0
+        return (self.model_flops_per_device / PEAK_FLOPS) / self.bound_s
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.coll_bytes,
+            "collectives": self.per_op,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_per_device": self.model_flops_per_device,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, case, n_devices: int) -> float:
+    """6·N·tokens (train) or 2·N·tokens (inference), per device."""
+    n_active = cfg.active_param_count()
+    if case.kind == "train":
+        tokens = case.batch * case.seq
+        total = 6.0 * n_active * tokens
+    elif case.kind == "prefill":
+        tokens = case.batch * case.seq
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * case.batch
+    return total / n_devices
+
+
+def analyze(compiled, cfg, case, n_devices: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    per_op = collective_bytes(compiled.as_text())
+    return Roofline(flops=flops, bytes_accessed=nbytes,
+                    coll_bytes=weighted_collective_bytes(per_op),
+                    per_op=per_op, n_devices=n_devices,
+                    model_flops_per_device=model_flops(cfg, case, n_devices))

@@ -1,0 +1,61 @@
+"""Assigned input-shape grid + abstract input specs for the dry-run.
+
+Every (arch × shape) cell resolves to ShapeDtypeStruct stand-ins (no device
+allocation).  ``decode_*``/``long_*`` lower ``serve_step`` (one token against
+a seq_len cache); ``long_500k`` requires sub-quadratic attention and is
+skipped for pure full-attention archs (recorded, per DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524288, 1),
+}
+
+# archs with sub-quadratic sequence handling (hybrid local-attn / SSM)
+SUBQUADRATIC = ("recurrentgemma-2b", "rwkv6-7b")
+
+
+def cell_supported(cfg: ArchConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, ("full O(L^2) attention at 524288 would be a " +
+                       "degenerate lowering; skipped per assignment")
+    return True, ""
+
+
+def batch_specs(cfg: ArchConfig, case: ShapeCase) -> Dict:
+    """Token/modality inputs (ShapeDtypeStructs) for the cell."""
+    B, T = case.batch, case.seq
+    if case.kind == "decode":
+        toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    else:
+        toks = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    batch = {"tokens": toks}
+    if case.kind == "train":
+        batch["targets"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    if cfg.family == "vlm" and case.kind != "decode":
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio" and case.kind != "decode":
+        batch["audio_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch

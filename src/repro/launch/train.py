@@ -1,0 +1,61 @@
+"""Training launcher: --arch <id> [--smoke] with mesh + FT loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 50 --batch 8 --seq 64
+
+Full-scale runs use the same entry point on a real TPU fleet; the mesh
+shape, FSDP rules and checkpoint cadence come from flags.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import get_arch
+from ..data.tokens import DataConfig
+from ..models import Model
+from ..optim.adamw import OptConfig
+from ..train.loop import LoopConfig, train
+from ..train.train_step import TrainConfig
+from .mesh import make_local_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    name = args.arch + ("-smoke" if args.smoke else "")
+    cfg = get_arch(name)
+    model = Model(cfg)
+    print(f"[train] {cfg.name}: {model.param_count()/1e6:.1f}M params, "
+          f"{len(jax.devices())} devices")
+    mesh = make_local_mesh(args.model_parallel) \
+        if len(jax.devices()) > 1 else None
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    hist = train(
+        model, data,
+        TrainConfig(microbatches=args.microbatches,
+                    opt=OptConfig(lr=args.lr, warmup_steps=10,
+                                  decay_steps=args.steps)),
+        LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                   log_every=10, ckpt_dir=args.ckpt_dir),
+        mesh=mesh)
+    print(f"[train] done: loss {hist['loss'][0]:.3f} -> "
+          f"{hist['loss'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

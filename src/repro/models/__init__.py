@@ -1,0 +1,2 @@
+"""LM substrate: model zoo for the assigned architectures."""
+from .model import Model

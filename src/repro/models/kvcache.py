@@ -1,0 +1,104 @@
+"""Serving caches per block kind.
+
+Dense causal blocks keep (B, S, Hkv, Dh) key/value buffers; sliding-window
+blocks keep a W-slot ring (plus an absolute-position array so masking needs
+no modular arithmetic at attend time); recurrent blocks keep O(1) state —
+which is why the hybrid/SSM architectures are the only ones that run the
+``long_500k`` shape (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+def block_cache_shapes(cfg: ArchConfig, kind: str, batch: int,
+                       seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    Hkv, dh, D = cfg.n_kv_heads, cfg.dh, cfg.d_model
+    bf = jnp.bfloat16
+    if kind in ("attn", "moe"):
+        return {"k": jax.ShapeDtypeStruct((batch, seq, Hkv, dh), bf),
+                "v": jax.ShapeDtypeStruct((batch, seq, Hkv, dh), bf)}
+    if kind == "local":
+        w = cfg.window or seq        # ring always has `window` slots
+        return {"k": jax.ShapeDtypeStruct((batch, w, Hkv, dh), bf),
+                "v": jax.ShapeDtypeStruct((batch, w, Hkv, dh), bf),
+                "kpos": jax.ShapeDtypeStruct((w,), jnp.int32)}
+    if kind == "cross":
+        return {"k": jax.ShapeDtypeStruct(
+                    (batch, cfg.n_image_tokens, Hkv, dh), bf),
+                "v": jax.ShapeDtypeStruct(
+                    (batch, cfg.n_image_tokens, Hkv, dh), bf)}
+    if kind == "rglru":
+        R = cfg.d_rnn or D
+        return {"h": jax.ShapeDtypeStruct((batch, R), jnp.float32),
+                "conv": jax.ShapeDtypeStruct(
+                    (batch, cfg.conv_width - 1, R), bf)}
+    if kind == "rwkv":
+        dh_r = cfg.rwkv_head_dim
+        H = D // dh_r
+        return {"s": jax.ShapeDtypeStruct((batch, H, dh_r, dh_r),
+                                          jnp.float32),
+                "shift_t": jax.ShapeDtypeStruct((batch, D), jnp.float32),
+                "shift_c": jax.ShapeDtypeStruct((batch, D), jnp.float32)}
+    if kind == "dec":
+        enc = cfg.encoder_seq
+        return {"k": jax.ShapeDtypeStruct((batch, seq, Hkv, dh), bf),
+                "v": jax.ShapeDtypeStruct((batch, seq, Hkv, dh), bf),
+                "xk": jax.ShapeDtypeStruct((batch, enc, cfg.n_heads, dh), bf),
+                "xv": jax.ShapeDtypeStruct((batch, enc, cfg.n_heads, dh), bf)}
+    raise ValueError(kind)
+
+
+def _stackshape(tree, n: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, seq: int) -> Dict:
+    """Full cache pytree (ShapeDtypeStructs) mirroring the params layout."""
+    out: Dict = {}
+    pat = cfg.pattern
+    if cfg.n_groups > 0:
+        out["groups"] = {
+            f"b{i}_{k}": _stackshape(
+                block_cache_shapes(cfg, k, batch, seq), cfg.n_groups)
+            for i, k in enumerate(pat)}
+    if cfg.n_rem_layers:
+        out["rem"] = {f"r{i}_{k}": block_cache_shapes(cfg, k, batch, seq)
+                      for i, k in enumerate(pat[: cfg.n_rem_layers])}
+    return out
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int) -> Dict:
+    def mk(s: jax.ShapeDtypeStruct):
+        if s.dtype == jnp.int32:            # kpos arrays start invalid
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+    return jax.tree.map(mk, cache_shapes(cfg, batch, seq))
+
+
+def pad_caches(cfg: ArchConfig, caches: Dict, extra: int) -> Dict:
+    """Extend dense KV caches by ``extra`` sequence slots (post-prefill, so
+    decode can append).  Ring / recurrent / cross caches are size-invariant.
+    """
+    def pad_block(name: str, block: Dict) -> Dict:
+        kind = name.split("_", 1)[1]
+        if kind not in ("attn", "moe", "dec"):
+            return block
+        out = dict(block)
+        for key in ("k", "v"):
+            arr = block[key]
+            pads = [(0, 0)] * arr.ndim
+            pads[arr.ndim - 3] = (0, extra)   # (..., S, Hkv, Dh)
+            out[key] = jnp.pad(arr, pads)
+        return out
+
+    new: Dict = {}
+    for sect in caches:
+        new[sect] = {n: pad_block(n, b) for n, b in caches[sect].items()}
+    return new

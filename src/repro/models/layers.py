@@ -1,0 +1,151 @@
+"""Shared neural layers: norms, rotary embeddings, attention, MLP.
+
+All functions are pure; parameters are dict subtrees produced by
+``specs.block_specs``.  Compute dtype is bf16 (params are fp32 and cast at
+use); softmax/normalization run in fp32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.flash_attention import ops as fa_ops
+
+
+def cdt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype_compute == "bfloat16" else jnp.float32
+
+
+def norm(cfg: ArchConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"] + p["bias"]
+    else:
+        y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + 1e-6)
+        y = y * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float) -> jnp.ndarray:
+    """x: (B, T, H, Dh); positions: (T,) or (B, T) absolute positions."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+        ang = ang[None, :, None, :]                      # (1, T, 1, half)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freq
+        ang = ang[:, :, None, :]                         # (B, T, 1, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def _proj_qkv(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
+              src: Optional[jnp.ndarray] = None):
+    dt = cdt(cfg)
+    src = x if src is None else src
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def attention(cfg: ArchConfig, p: Dict, x: jnp.ndarray, *,
+              positions: jnp.ndarray, causal: bool = True,
+              window: Optional[int] = None,
+              impl: str = "xla") -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence self attention (train / prefill).
+
+    Returns (output, {"k","v"} roped keys/values for cache construction).
+    """
+    dt = cdt(cfg)
+    q, k, v = _proj_qkv(cfg, p, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                               impl=impl)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+    return out, {"k": k, "v": v}
+
+
+def cross_attention(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
+                    kv_src: jnp.ndarray, *,
+                    impl: str = "xla",
+                    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    ) -> Tuple[jnp.ndarray, Dict]:
+    """Cross attention to a fixed memory (image embeds / encoder output)."""
+    dt = cdt(cfg)
+    if kv is None:
+        _, k, v = _proj_qkv(cfg, p, kv_src, src=kv_src)
+    else:
+        k, v = kv
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    o = fa_ops.flash_attention(q, k, v, causal=False, impl=impl)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+    return out, {"k": k, "v": v}
+
+
+def decode_attention(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
+                     cache: Dict, pos: jnp.ndarray, *,
+                     window: Optional[int] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token attention against a KV cache.
+
+    ``cache``: {"k","v"}: (B, S, Hkv, Dh) dense, plus "kpos" (S,) for ring
+    (windowed) caches.  The new token is written at index ``pos`` (dense) or
+    ``pos % W`` (ring) before attending.
+    """
+    dt = cdt(cfg)
+    b = x.shape[0]
+    q, k_new, v_new = _proj_qkv(cfg, p, x)       # T == 1
+    q = rope(q, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    k_new = rope(k_new, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    slot = pos % S if window is not None else jnp.minimum(pos, S - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    if window is not None:
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
+        mask = (kpos <= pos) & (kpos > pos - window) & (kpos >= 0)
+    else:
+        kpos = None
+        mask = jnp.arange(S) <= pos
+    # dense masked attention over the cache (T=1)
+    g = cfg.n_heads // k.shape[2]
+    qq = q.reshape(b, 1, k.shape[2], g, q.shape[-1]).astype(jnp.float32)
+    sc = jnp.einsum("bthgd,bshd->bhgts", qq, k.astype(jnp.float32))
+    sc = sc / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    sc = jnp.where(mask[None, None, None, None, :], sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgts,bshd->bthgd", pr, v.astype(jnp.float32))
+    o = o.reshape(b, 1, cfg.n_heads, q.shape[-1]).astype(dt)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+    new_cache = {"k": k, "v": v}
+    if kpos is not None:
+        new_cache["kpos"] = kpos
+    return out, new_cache
+
+
+def mlp(cfg: ArchConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = cdt(cfg)
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+        return h @ p["wo"].astype(dt)
+    h = jax.nn.gelu(x @ p["wi"].astype(dt) + p["bi"].astype(dt))
+    return h @ p["wo"].astype(dt) + p["bo"].astype(dt)

@@ -1,0 +1,92 @@
+"""Model facade: init / loss / prefill / decode, plus shape-only variants
+for the dry-run (no allocation — everything derives from ParamSpecs)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import transformer as T
+from . import specs as S
+from .kvcache import cache_shapes, init_cache
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    impl: str = "xla"
+
+    # -- parameters ---------------------------------------------------------
+    def specs(self) -> Dict:
+        return S.model_specs(self.cfg)
+
+    def init(self, key) -> Dict:
+        return S.init_params(self.specs(), key)
+
+    def param_shapes(self) -> Dict:
+        return S.spec_shapes(self.specs())
+
+    def logical_axes(self) -> Dict:
+        return S.logical_axes(self.specs())
+
+    def param_count(self) -> int:
+        return S.count_params(self.specs())
+
+    # -- training -----------------------------------------------------------
+    loss_chunk: int = 512
+
+    def loss(self, params: Dict, batch: Dict,
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Cross-entropy with *chunked* logits: the (B, c, V) logits block is
+        recomputed in the backward pass (jax.checkpoint), so the full
+        (B, T, V) fp32 logits tensor never materializes — essential for the
+        big-vocab / unshardable-vocab architectures (DESIGN.md §3)."""
+        hidden, aux = T.forward_hidden(self.cfg, params, batch,
+                                       impl=self.impl)
+        targets = batch["targets"]
+        mask = batch.get("mask", jnp.ones_like(targets, jnp.float32))
+        B, T_, D = hidden.shape
+        c = self.loss_chunk if T_ % self.loss_chunk == 0 else T_
+        if self.cfg.cost_exact:
+            c = T_                 # cost-probe: no loss-chunk scan
+        n = T_ // c
+
+        def chunk(carry, xs):
+            h_c, t_c, m_c = xs                  # (B, c, D) (B, c) (B, c)
+            logits = T.logits_fn(self.cfg, params, h_c)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(
+                logp, t_c[..., None], axis=-1)[..., 0]
+            s, m = carry
+            return (s + (nll * m_c).sum(), m + m_c.sum()), None
+
+        xs = (hidden.reshape(B, n, c, D).transpose(1, 0, 2, 3),
+              targets.reshape(B, n, c).transpose(1, 0, 2),
+              mask.reshape(B, n, c).transpose(1, 0, 2))
+        (nll_sum, mask_sum), _ = jax.lax.scan(
+            jax.checkpoint(chunk),
+            (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), xs)
+        denom = jnp.maximum(mask_sum, 1.0)
+        ce = nll_sum / denom
+        loss = ce + aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux, "tokens": mask_sum}
+
+    # -- serving --------------------------------------------------------------
+    def prefill(self, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        return T.prefill(self.cfg, params, batch, impl=self.impl)
+
+    def decode(self, params: Dict, caches: Dict, tokens: jnp.ndarray,
+               pos: jnp.ndarray, batch: Optional[Dict] = None,
+               ) -> Tuple[jnp.ndarray, Dict]:
+        return T.decode_step(self.cfg, params, caches, tokens, pos,
+                             batch or {}, impl=self.impl)
+
+    # -- serving shapes (dry-run) ---------------------------------------------
+    def cache_shapes(self, batch: int, seq: int) -> Dict:
+        return cache_shapes(self.cfg, batch, seq)
+
+    def init_cache(self, batch: int, seq: int) -> Dict:
+        return init_cache(self.cfg, batch, seq)

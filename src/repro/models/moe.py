@@ -1,0 +1,82 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch.
+
+Expert-parallel by construction: expert tensors carry the 'expert' logical
+axis (sharded over the mesh 'model' axis), so GSPMD turns the dispatch
+gather/scatter into the all-to-all pattern of classic EP.
+
+Routing/ranking runs **per batch row** (argsort along the T·K axis of each
+sequence): the batch axis stays data-sharded, so position-in-expert ranking
+never triggers a cross-shard sort/all-gather — capacity is per-sequence,
+matching per-device capacity semantics of deployed EP systems.  Tokens over
+an expert's capacity are dropped (Switch/GShard semantics) during training;
+decode (T == 1) is dropless.  The router aux loss balances load.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import cdt
+
+
+def moe_ffn(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, D) -> (out, aux_loss)."""
+    dt = cdt(cfg)
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    nk = T * K
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B, T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (B, T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balance auxiliary loss (Switch-style) ---
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (B * T * K))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # --- per-row position-in-expert ranking (shard-local) ---
+    flat_e = expert_ids.reshape(B, nk)                         # (B, T*K)
+    flat_g = gate_vals.reshape(B, nk)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    newrun = jnp.concatenate(
+        [jnp.ones((B, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1)
+    idx = jnp.broadcast_to(jnp.arange(nk)[None], (B, nk))
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(newrun, idx, 0), axis=1)
+    rank_sorted = (idx - run_start).astype(jnp.int32)
+    pos_in_e = jnp.zeros((B, nk), jnp.int32).at[
+        jnp.arange(B)[:, None], order].set(rank_sorted)
+
+    if T == 1:
+        cap = nk          # decode: dropless (nk = K slots per row)
+    else:
+        cap = max(1, int(nk * cfg.capacity_factor / E))
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, pos_in_e, 0)
+    tok_idx = jnp.broadcast_to(
+        (jnp.arange(nk) // K)[None], (B, nk))                  # token per slot
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, nk))
+
+    toks = jnp.take_along_axis(
+        x.astype(dt), tok_idx[..., None], axis=1)              # (B, T*K, D)
+    disp = jnp.zeros((B, E, cap, D), dt).at[bidx, flat_e, slot].add(
+        jnp.where(keep[..., None], toks, 0))
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", disp, p["wg"].astype(dt)))
+    h = h * jnp.einsum("becd,edf->becf", disp, p["wi"].astype(dt))
+    y = jnp.einsum("becf,efd->becd", h, p["wo"].astype(dt))    # (B, E, C, D)
+
+    gathered = y[bidx, flat_e, slot]                           # (B, T*K, D)
+    contrib = gathered * (flat_g * keep).astype(dt)[..., None]
+    out = jnp.zeros((B, T, D), dt).at[bidx, tok_idx].add(contrib)
+    return out, aux

@@ -1,0 +1,95 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) — TPU-native form.
+
+The diagonal gated linear recurrence
+
+    a_t = exp(-c · softplus(Λ) · σ(W_a x_t)),   c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (σ(W_i x_t) ⊙ x_t)
+
+is evaluated with ``jax.lax.associative_scan`` over time (log-depth on TPU
+instead of a length-T sequential loop).  A short causal conv1d precedes the
+recurrence as in Griffin's recurrent block; decode carries (h, conv tail).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import cdt
+
+_C = 8.0
+
+
+def _conv1d(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
+            state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Causal depthwise conv over time.  x: (B, T, R)."""
+    cw = cfg.conv_width
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+              for i in range(cw))
+    out = out + p["conv_b"].astype(x.dtype)
+    return out, xp[:, -(cw - 1):]  # new conv tail
+
+
+def _gates(p: Dict, xc: jnp.ndarray):
+    f32 = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(f32 @ p["wa"].astype(jnp.float32))
+    i = jax.nn.sigmoid(f32 @ p["wi"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0)) * (i * f32)
+    return a, b
+
+
+def rglru_scan(cfg: ArchConfig, p: Dict, xc: jnp.ndarray,
+               h0: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence recurrence.  xc: (B, T, R) conv output.
+    Returns (h over time (B,T,R) f32, final state (B,R))."""
+    a, b = _gates(p, xc)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(cfg: ArchConfig, p: Dict, xc: jnp.ndarray,
+               h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step.  xc: (B, 1, R)."""
+    a, b = _gates(p, xc)
+    h = a[:, 0] * h0.astype(jnp.float32) + b[:, 0]
+    return h[:, None], h
+
+
+def rglru_block(cfg: ArchConfig, p: Dict, x: jnp.ndarray, *,
+                cache: Optional[Dict] = None,
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Griffin recurrent block: (gelu gate branch) ⊙ (conv → RG-LRU branch).
+
+    x: normed input (B, T, D).  Returns (out (B,T,D), new cache or None).
+    """
+    dt = cdt(cfg)
+    y = jax.nn.gelu(x @ p["wy"].astype(dt))
+    xb = x @ p["wx"].astype(dt)
+    conv_state = cache["conv"] if cache is not None else None
+    h0 = cache["h"] if cache is not None else None
+    xc, conv_tail = _conv1d(cfg, p, xb, conv_state)
+    if cache is not None and x.shape[1] == 1:
+        h, h_last = rglru_step(cfg, p, xc, h0)
+    else:
+        h, h_last = rglru_scan(cfg, p, xc, h0)
+    out = (y * h.astype(dt)) @ p["wout"].astype(dt)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_last.astype(jnp.float32),
+                     "conv": conv_tail.astype(cache["conv"].dtype)}
+    return out, new_cache

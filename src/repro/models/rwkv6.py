@@ -1,0 +1,165 @@
+"""RWKV-6 ("Finch") block: data-dependent-decay linear attention, chunked.
+
+TPU adaptation (DESIGN.md §2): the per-token recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t            (per head, (Dk, Dv) state)
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+is evaluated chunk-wise: within a chunk of length L the interaction matrix
+A[t,s] = Σ_d r_{t,d} k_{s,d} exp(lp_{t-1,d} − lp_{s,d}) (lp = cumulative log
+decay) factors into two MXU einsums (r·e^{lp} against k·e^{−lp}), the carry
+state enters through one more einsum, and the cross-chunk state update is a
+third — all dense matmuls instead of a length-T scan.  The per-step log decay
+is clipped to ≥ −0.5·e so e^{±lp} stays within fp32 over a 32-step chunk
+(recorded as a modelling restriction in DESIGN.md).
+
+Simplifications vs the reference implementation (noted in DESIGN.md): static
+token-shift mixing coefficients (no LoRA on μ), per-channel decay projected
+by a single dense matrix, RMS-style per-channel output norm instead of
+GroupNorm.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import cdt
+
+CHUNK = 32
+_W_CLIP = 0.5  # clip on exp-arg: per-step log-decay >= -e^0.5 ≈ -1.65
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Token shift: x_{t-1}, with ``prev`` = last token of previous segment."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _heads(x: jnp.ndarray, dh: int) -> jnp.ndarray:
+    b, t, d = x.shape
+    return x.reshape(b, t, d // dh, dh).transpose(0, 2, 1, 3)  # (B,H,T,dh)
+
+
+def rwkv_time_mix(cfg: ArchConfig, p: Dict, x: jnp.ndarray, *,
+                  state: Optional[jnp.ndarray] = None,
+                  shift_prev: Optional[jnp.ndarray] = None,
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: normed (B, T, D).  Returns (out, new_state, new_shift)."""
+    dt = cdt(cfg)
+    B, T, D = x.shape
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+    xs = _shift(x, shift_prev)
+    r = _heads(_mix(x, xs, p["mu_r"]) @ p["wr"].astype(dt), dh)
+    k = _heads(_mix(x, xs, p["mu_k"]) @ p["wk"].astype(dt), dh)
+    v = _heads(_mix(x, xs, p["mu_v"]) @ p["wv"].astype(dt), dh)
+    g = jax.nn.silu(_mix(x, xs, p["mu_g"]) @ p["wg"].astype(dt))
+    w_arg = (_mix(x, xs, p["mu_w"]).astype(jnp.float32)
+             @ p["ww"].astype(jnp.float32)) + p["w_bias"]
+    logw = -jnp.exp(jnp.clip(w_arg, -8.0, _W_CLIP))          # (B,T,D) <= 0
+    logw = _heads(logw, dh)                                   # (B,H,T,dh)
+    u = p["u"].reshape(H, dh).astype(jnp.float32)
+
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    L = min(CHUNK, T)
+    nC = -(-T // L)
+    pad = nC * L - T
+    if pad:
+        r, k, v, logw = (jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                         for a in (r, k, v, logw))
+
+    def chunk_step(S, inp):
+        rc, kc, vc, lwc = inp                                 # (B,H,L,dh)
+        lp = jnp.cumsum(lwc, axis=2)                          # inclusive
+        lp_prev = lp - lwc                                    # exclusive
+        q_ = rc * jnp.exp(lp_prev)
+        k_ = kc * jnp.exp(-lp)
+        A = jnp.einsum("bhtd,bhsd->bhts", q_, k_)
+        tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        diag = jnp.einsum("bhtd,bhtd,hd->bht", rc, kc, u)
+        y = jnp.einsum("bhts,bhse->bhte", A, vc)
+        y = y + jnp.einsum("bhtd,bhde->bhte", q_, S)          # carry term
+        y = y + diag[..., None] * vc
+        lpL = lp[:, :, -1:, :]                                # (B,H,1,dh)
+        kd = kc * jnp.exp(lpL - lp)
+        S_new = jnp.exp(lpL[:, :, 0, :, None]) * S + \
+            jnp.einsum("bhsd,bhse->bhde", kd, vc)
+        return S_new, y
+
+    rs = r.reshape(B, H, nC, L, dh).transpose(2, 0, 1, 3, 4)
+    ks = k.reshape(B, H, nC, L, dh).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, H, nC, L, dh).transpose(2, 0, 1, 3, 4)
+    ws = logw.reshape(B, H, nC, L, dh).transpose(2, 0, 1, 3, 4)
+    if cfg.cost_exact:     # cost-probe mode: unroll the chunk loop
+        S_fin, ys_l = state, []
+        for ci in range(nC):
+            S_fin, yc = chunk_step(S_fin, (rs[ci], ks[ci], vs[ci], ws[ci]))
+            ys_l.append(yc)
+        ys = jnp.stack(ys_l)
+    else:
+        S_fin, ys = jax.lax.scan(chunk_step, state, (rs, ks, vs, ws))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, nC * L, dh)[:, :, :T]
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, D)
+    # per-channel output norm (GroupNorm stand-in) + gate
+    y = y * jax.lax.rsqrt((y ** 2).mean(-1, keepdims=True) + 1e-6)
+    y = (y * p["gn_scale"]).astype(dt) * g
+    out = y @ p["wo"].astype(dt)
+    return out, S_fin, x[:, -1].astype(jnp.float32)
+
+
+def rwkv_channel_mix(cfg: ArchConfig, p: Dict, x: jnp.ndarray, *,
+                     shift_prev: Optional[jnp.ndarray] = None,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    dt = cdt(cfg)
+    xs = _shift(x, shift_prev)
+    k = _mix(x, xs, p["c_mu_k"]) @ p["c_wk"].astype(dt)
+    k = jnp.square(jax.nn.relu(k))
+    rgate = jax.nn.sigmoid(_mix(x, xs, p["c_mu_r"]) @ p["c_wr"].astype(dt))
+    return (k @ p["c_wv"].astype(dt)) * rgate, x[:, -1].astype(jnp.float32)
+
+
+def rwkv_time_mix_step(cfg: ArchConfig, p: Dict, x: jnp.ndarray, *,
+                       state: jnp.ndarray, shift_prev: jnp.ndarray,
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence (decode).  x: (B, 1, D)."""
+    dt = cdt(cfg)
+    B, _, D = x.shape
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+    xs = shift_prev[:, None].astype(x.dtype)
+    r = (_mix(x, xs, p["mu_r"]) @ p["wr"].astype(dt))[:, 0] \
+        .reshape(B, H, dh).astype(jnp.float32)
+    k = (_mix(x, xs, p["mu_k"]) @ p["wk"].astype(dt))[:, 0] \
+        .reshape(B, H, dh).astype(jnp.float32)
+    v = (_mix(x, xs, p["mu_v"]) @ p["wv"].astype(dt))[:, 0] \
+        .reshape(B, H, dh).astype(jnp.float32)
+    g = jax.nn.silu(_mix(x, xs, p["mu_g"]) @ p["wg"].astype(dt))[:, 0]
+    w_arg = ((_mix(x, xs, p["mu_w"]).astype(jnp.float32)
+              @ p["ww"].astype(jnp.float32)) + p["w_bias"])[:, 0]
+    w = jnp.exp(-jnp.exp(jnp.clip(w_arg, -8.0, _W_CLIP))).reshape(B, H, dh)
+    u = p["u"].reshape(H, dh).astype(jnp.float32)
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    y = jnp.einsum("bhd,bhde->bhe", r, state + u[None, :, :, None] * kv)
+    state = w[..., None] * state + kv
+    y = y.reshape(B, 1, D)
+    y = y * jax.lax.rsqrt((y ** 2).mean(-1, keepdims=True) + 1e-6)
+    y = (y * p["gn_scale"]).astype(dt) * g[:, None]
+    out = y @ p["wo"].astype(dt)
+    return out, state, x[:, -1].astype(jnp.float32)

@@ -1,0 +1,320 @@
+"""Model assembly: block dispatch, scan-over-groups, forward/prefill/decode.
+
+Layers are stacked per *pattern group* (e.g. RecurrentGemma's (rglru, rglru,
+local) triple) and iterated with ``jax.lax.scan`` so compile time and HLO
+size stay O(1) in depth; remainder layers (26 = 8·3 + 2) run unrolled.
+Training wraps the scanned body in ``jax.checkpoint`` per the config's remat
+policy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from . import moe as M
+from . import rglru as RG
+from . import rwkv6 as RW
+
+
+# ---------------------------------------------------------------------------
+# Single block application
+# ---------------------------------------------------------------------------
+
+def _seq_shard_constraint(cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Sequence-parallel residual layout (cfg.seq_shard; §Perf).
+
+    Resolved against the ambient mesh: tries the multi-pod spec first, then
+    single-pod; outside any mesh context the flag is a no-op."""
+    if not cfg.seq_shard or x.ndim != 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+    for spec in (P(("pod", "data"), "model", None),
+                 P("data", "model", None)):
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:
+            continue
+    return x
+
+
+def apply_block(cfg: ArchConfig, kind: str, p: Dict, x: jnp.ndarray,
+                ctx: Dict[str, Any], cache: Optional[Dict],
+                ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (x, new_cache_or_None, aux_loss)."""
+    mode = ctx["mode"]              # train | prefill | decode
+    impl = ctx.get("impl", "xla")
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[Dict] = None
+    x = _seq_shard_constraint(cfg, x)
+
+    if kind in ("attn", "local", "moe", "enc", "dec"):
+        h = L.norm(cfg, p["ln1"], x)
+        window = cfg.window if kind == "local" else None
+        causal = kind != "enc"
+        if mode == "decode":
+            a, kv_new = L.decode_attention(cfg, p["attn"], h, cache,
+                                           ctx["pos"], window=window)
+            new_cache = dict(cache)
+            new_cache.update(kv_new)
+        else:
+            a, kv = L.attention(cfg, p["attn"], h,
+                                positions=ctx["positions"], causal=causal,
+                                window=window, impl=impl)
+            if mode == "prefill" and kind != "enc":
+                new_cache = _build_cache(cfg, kind, kv, cache, window)
+        x = x + a
+        if kind == "dec":
+            h = L.norm(cfg, p["lnx"], x)
+            if mode == "decode":
+                a, _ = L.cross_attention(cfg, p["xattn"], h, h,
+                                         impl=impl,
+                                         kv=(cache["xk"], cache["xv"]))
+            else:
+                a, xkv = L.cross_attention(cfg, p["xattn"], h,
+                                           ctx["enc_out"], impl=impl)
+                if mode == "prefill":
+                    new_cache["xk"] = xkv["k"].astype(jnp.bfloat16)
+                    new_cache["xv"] = xkv["v"].astype(jnp.bfloat16)
+            x = x + a
+        h = L.norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            f, aux = M.moe_ffn(cfg, p["moe"], h)
+        else:
+            f = L.mlp(cfg, p["mlp"], h)
+        return x + f, new_cache, aux
+
+    if kind == "cross":
+        h = L.norm(cfg, p["ln1"], x)
+        if mode == "decode":
+            a, _ = L.cross_attention(cfg, p["xattn"], h, h,
+                                     impl=impl, kv=(cache["k"], cache["v"]))
+            new_cache = cache
+        else:
+            a, xkv = L.cross_attention(cfg, p["xattn"], h, ctx["img"],
+                                       impl=impl)
+            if mode == "prefill":
+                new_cache = {"k": xkv["k"].astype(jnp.bfloat16),
+                             "v": xkv["v"].astype(jnp.bfloat16)}
+        gate = jnp.tanh(p["gate"].astype(x.dtype))
+        x = x + gate * a
+        h = L.norm(cfg, p["ln2"], x)
+        return x + L.mlp(cfg, p["mlp"], h), new_cache, aux
+
+    if kind == "rglru":
+        h = L.norm(cfg, p["ln1"], x)
+        rec_cache = None
+        if mode != "train":
+            rec_cache = cache if cache is not None else _zero_rec(cfg, x)
+        a, rec_new = RG.rglru_block(cfg, p["rec"], h, cache=rec_cache)
+        x = x + a
+        h = L.norm(cfg, p["ln2"], x)
+        return x + L.mlp(cfg, p["mlp"], h), rec_new, aux
+
+    if kind == "rwkv":
+        h = L.norm(cfg, p["ln1"], x)
+        if mode == "decode":
+            a, s_new, sh_t = RW.rwkv_time_mix_step(
+                cfg, p["mix"], h, state=cache["s"],
+                shift_prev=cache["shift_t"])
+        else:
+            st = cache["s"] if (mode == "prefill" and cache is not None) \
+                else None
+            sp = cache["shift_t"] if (mode == "prefill" and cache is not None
+                                      ) else None
+            a, s_new, sh_t = RW.rwkv_time_mix(cfg, p["mix"], h, state=st,
+                                              shift_prev=None)
+        x = x + a
+        h = L.norm(cfg, p["ln2"], x)
+        sp_c = cache["shift_c"] if (mode == "decode") else None
+        f, sh_c = RW.rwkv_channel_mix(cfg, p["mix"], h, shift_prev=sp_c)
+        x = x + f
+        new_cache = None
+        if mode != "train":
+            new_cache = {"s": s_new, "shift_t": sh_t, "shift_c": sh_c}
+        return x, new_cache, aux
+
+    raise ValueError(kind)
+
+
+def _zero_rec(cfg: ArchConfig, x: jnp.ndarray) -> Dict:
+    R = cfg.d_rnn or cfg.d_model
+    return {"h": jnp.zeros((x.shape[0], R), jnp.float32),
+            "conv": jnp.zeros((x.shape[0], cfg.conv_width - 1, R),
+                              jnp.bfloat16)}
+
+
+def _build_cache(cfg: ArchConfig, kind: str, kv: Dict,
+                 proto: Optional[Dict], window: Optional[int]) -> Dict:
+    """Turn prefill keys/values (B, T, Hkv, Dh) into the serving cache."""
+    k, v = kv["k"].astype(jnp.bfloat16), kv["v"].astype(jnp.bfloat16)
+    T = k.shape[1]
+    if kind == "local":
+        w = window or T              # ring always has `window` slots
+        i = jnp.arange(w)
+        pidx = (T - 1) - ((T - 1 - i) % w)
+        valid = pidx >= 0
+        kpos = jnp.where(valid, pidx, -1).astype(jnp.int32)
+        safe = jnp.clip(pidx, 0, T - 1)
+        return {"k": k[:, safe] * valid[None, :, None, None],
+                "v": v[:, safe] * valid[None, :, None, None],
+                "kpos": kpos}
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Stack application (scan over groups + unrolled remainder)
+# ---------------------------------------------------------------------------
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def apply_stack(cfg: ArchConfig, params: Dict, x: jnp.ndarray,
+                ctx: Dict[str, Any], caches: Optional[Dict] = None,
+                pattern: Optional[Tuple[str, ...]] = None,
+                prefix: str = "b",
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """Returns (x, aux_total, new_caches)."""
+    pat = pattern if pattern is not None else cfg.pattern
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict = {}
+    train = ctx["mode"] == "train"
+
+    if "groups" in params:
+        names = [f"{prefix}{i}_{k}" for i, k in enumerate(pat)]
+        gp = tuple(params["groups"][n] for n in names)
+        gc = tuple(caches["groups"][n] for n in names) if caches else None
+
+        def body(carry, xs):
+            h, aux = carry
+            ps = xs[0]
+            cs = xs[1] if caches else (None,) * len(pat)
+            outs = []
+            for i, kind in enumerate(pat):
+                h, c_new, a = apply_block(cfg, kind, ps[i], h, ctx, cs[i])
+                aux = aux + a
+                outs.append(c_new)
+            return (h, aux), (tuple(outs) if caches or ctx["mode"] ==
+                              "prefill" else None)
+
+        n_groups = jax.tree.leaves(gp)[0].shape[0]
+        if cfg.cost_exact:
+            # unrolled (cost-probe mode): cost_analysis sees every layer
+            ys_list = []
+            for g in range(n_groups):
+                xs_g = (jax.tree.map(lambda a: a[g], gp),) + (
+                    (jax.tree.map(lambda a: a[g], gc),) if caches else ())
+                (x, aux_total), y = body((x, aux_total), xs_g)
+                ys_list.append(y)
+            ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_list) \
+                if ys_list and ys_list[0] is not None else None
+        else:
+            body_fn = _remat(cfg, body) if train else body
+            xs = (gp, gc) if caches else (gp,)
+            (x, aux_total), ys = jax.lax.scan(body_fn, (x, aux_total), xs)
+        if ys is not None:
+            new_caches["groups"] = {n: ys[i] for i, n in enumerate(names)}
+
+    if "rem" in params:
+        new_caches.setdefault("rem", {})
+        for i, kind in enumerate(pat[: cfg.n_rem_layers]):
+            n = f"r{i}_{kind}"
+            c = caches["rem"][n] if caches else None
+            x, c_new, a = apply_block(cfg, kind, params["rem"][n], x, ctx, c)
+            aux_total = aux_total + a
+            if c_new is not None:
+                new_caches["rem"][n] = c_new
+        if not new_caches["rem"]:
+            new_caches.pop("rem")
+
+    return x, aux_total, (new_caches if new_caches else None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits / model-level entry points
+# ---------------------------------------------------------------------------
+
+def embed(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["embed"]["tok"].astype(L.cdt(cfg))[tokens]
+
+
+def logits_fn(cfg: ArchConfig, params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.tie_embeddings:
+        return xf @ params["embed"]["tok"].astype(jnp.float32).T
+    return xf @ params["unembed"]["w"].astype(jnp.float32)
+
+
+def _context(cfg: ArchConfig, params: Dict, batch: Dict, mode: str,
+             impl: str) -> Dict[str, Any]:
+    """Modality frontends.  In decode mode the cross K/V live in the cache,
+    so neither the image projection nor the encoder is recomputed."""
+    ctx: Dict[str, Any] = {"mode": mode, "impl": impl}
+    if cfg.cost_exact and impl == "xla":
+        ctx["impl"] = "xla_unroll"
+    if mode == "decode":
+        return ctx
+    if "image_embeds" in batch:
+        img = batch["image_embeds"].astype(L.cdt(cfg))
+        ctx["img"] = img @ params["img_proj"]["w"].astype(L.cdt(cfg))
+    if "audio_embeds" in batch:
+        enc = params["encoder"]
+        h = batch["audio_embeds"].astype(L.cdt(cfg)) @ \
+            enc["in_proj"]["w"].astype(L.cdt(cfg))
+        ectx = {"mode": "train", "impl": impl,
+                "positions": jnp.arange(h.shape[1])}
+        h, _, _ = apply_stack(cfg, enc, h, ectx, pattern=("enc",))
+        ctx["enc_out"] = L.norm(cfg, enc["final_norm"], h)
+    return ctx
+
+
+def forward_hidden(cfg: ArchConfig, params: Dict, batch: Dict, *,
+                   impl: str = "xla") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Backbone forward: returns (final-norm hidden (B,T,D), aux_loss)."""
+    tokens = batch["tokens"]
+    x = embed(cfg, params, tokens)
+    ctx = _context(cfg, params, batch, "train", impl)
+    ctx["positions"] = jnp.arange(tokens.shape[1])
+    x, aux, _ = apply_stack(cfg, params, x, ctx)
+    return L.norm(cfg, params["final_norm"], x), aux
+
+
+def forward(cfg: ArchConfig, params: Dict, batch: Dict, *,
+            impl: str = "xla") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: returns (logits (B,T,V) fp32, aux_loss)."""
+    x, aux = forward_hidden(cfg, params, batch, impl=impl)
+    return logits_fn(cfg, params, x), aux
+
+
+def prefill(cfg: ArchConfig, params: Dict, batch: Dict, *,
+            impl: str = "xla") -> Tuple[jnp.ndarray, Dict]:
+    """Prefill: returns (last-position logits (B,V), caches)."""
+    tokens = batch["tokens"]
+    x = embed(cfg, params, tokens)
+    ctx = _context(cfg, params, batch, "prefill", impl)
+    ctx["positions"] = jnp.arange(tokens.shape[1])
+    x, _, caches = apply_stack(cfg, params, x, ctx)
+    x = L.norm(cfg, params["final_norm"], x[:, -1:])
+    return logits_fn(cfg, params, x)[:, 0], caches
+
+
+def decode_step(cfg: ArchConfig, params: Dict, caches: Dict,
+                tokens: jnp.ndarray, pos: jnp.ndarray, batch: Dict, *,
+                impl: str = "xla") -> Tuple[jnp.ndarray, Dict]:
+    """One decode step.  tokens: (B, 1); pos: scalar absolute position."""
+    x = embed(cfg, params, tokens)
+    ctx = _context(cfg, params, batch, "decode", impl)
+    ctx["pos"] = pos
+    x, _, new_caches = apply_stack(cfg, params, x, ctx, caches=caches)
+    x = L.norm(cfg, params["final_norm"], x)
+    return logits_fn(cfg, params, x)[:, 0], new_caches

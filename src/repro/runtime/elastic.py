@@ -1,0 +1,31 @@
+"""Elastic re-scaling: restore a checkpoint under a different mesh.
+
+Checkpoints store logical (unsharded) arrays, so scaling from N to M chips
+is just `restore(..., shardings=tree_shardings(new_mesh, ...))` — every leaf
+is re-placed under the new mesh's partitioning.  The data pipeline is a pure
+function of (seed, step, shard) so it re-shards for free.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from ..checkpoint.ckpt import CheckpointManager
+from ..models import Model
+from ..sharding import rules as shr
+from ..train.train_step import state_shardings
+
+
+def restore_for_mesh(ckpt: CheckpointManager, model: Model, mesh,
+                     step: Optional[int] = None):
+    """Restore the train state resharded for ``mesh`` (any device count)."""
+    import jax.numpy as jnp
+    from ..optim import adamw
+
+    shapes = model.param_shapes()
+    like = {"params": shapes,
+            "opt": {"m": shapes, "v": shapes,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+    shardings = state_shardings(model, mesh) if mesh is not None else None
+    return ckpt.restore(like, step=step, shardings=shardings)

@@ -1,0 +1,44 @@
+"""Serving steps: prefill and single-token decode, jit/AOT-lowerable.
+
+``decode_*`` dry-run shapes lower exactly this serve_step: one new token
+against a seq_len-deep cache (dense KV for attention archs, O(1) state for
+recurrent archs — which is why only those run ``long_500k``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model
+
+
+def make_prefill_step(model: Model):
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode(params, caches, tokens, pos):
+        return model.decode(params, caches, tokens, pos)
+    return decode
+
+
+def greedy_generate(model: Model, params, batch: Dict, steps: int,
+                    ) -> jnp.ndarray:
+    """Host-driven greedy decoding (example/serving driver)."""
+    from ..models.kvcache import pad_caches
+    logits, caches = jax.jit(model.prefill)(params, batch)
+    caches = pad_caches(model.cfg, caches, steps)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    T0 = batch["tokens"].shape[1]
+    out = [tok]
+    decode = jax.jit(model.decode)
+    for i in range(steps - 1):
+        logits, caches = decode(params, caches, tok[:, None],
+                                jnp.asarray(T0 + i, jnp.int32))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

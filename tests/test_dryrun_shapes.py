@@ -1,0 +1,27 @@
+"""Dry-run grid definition: 10 archs x 4 shapes = 40 cells; skips recorded
+only for long_500k on pure full-attention archs."""
+from repro.configs import ARCHS
+from repro.launch.shapes import SHAPES, cell_supported
+
+
+def test_grid_is_40_cells():
+    assert len(ARCHS) == 10 and len(SHAPES) == 4
+
+
+def test_long_context_skips():
+    skipped = [(a, s) for a in ARCHS for s in SHAPES
+               if not cell_supported(ARCHS[a], s)[0]]
+    assert all(s == "long_500k" for _, s in skipped)
+    assert {a for a, _ in skipped} == set(ARCHS) - {
+        "recurrentgemma-2b", "rwkv6-7b"}
+    assert len(skipped) == 8
+
+
+def test_batch_specs_cover_modalities():
+    from repro.launch.shapes import batch_specs
+    b = batch_specs(ARCHS["llama-3.2-vision-90b"], SHAPES["train_4k"])
+    assert "image_embeds" in b
+    b = batch_specs(ARCHS["whisper-tiny"], SHAPES["prefill_32k"])
+    assert "audio_embeds" in b
+    b = batch_specs(ARCHS["rwkv6-7b"], SHAPES["decode_32k"])
+    assert b["tokens"].shape == (128, 1)

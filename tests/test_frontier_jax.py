@@ -1,0 +1,60 @@
+"""JAX frontier engines == host references (incl. morsel splitting and
+cache-tier configurations)."""
+import numpy as np
+import pytest
+
+from repro.core import (choose_plan, lftj_count, lftj_evaluate,
+                        cycle_query, path_query, lollipop_query)
+from repro.core.cached_frontier import JaxCachedTrieJoin
+from repro.core.frontier import JaxTrieJoin, jax_lftj_count, \
+    jax_lftj_evaluate
+
+
+@pytest.mark.parametrize("qf,cap", [
+    (lambda: path_query(4), 64),
+    (lambda: cycle_query(4), 1 << 12),
+    (lambda: cycle_query(5), 64),
+    (lambda: lollipop_query(3, 2), 256),
+])
+def test_vectorized_lftj_matches_reference(small_graphs, qf, cap):
+    q = qf()
+    db = small_graphs[1]
+    td, order = choose_plan(q, db.stats())
+    want = lftj_count(q, order, db)
+    assert jax_lftj_count(q, order, db, capacity=cap) == want
+    ev = jax_lftj_evaluate(q, order, db, capacity=cap)
+    ref = sorted(map(tuple, lftj_evaluate(q, order, db)))
+    assert sorted(map(tuple, ev.tolist())) == ref
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(),                                  # both tiers
+    dict(cache_slots=0),                     # tier-1 only
+    dict(dedup=False),                       # tier-2 only
+    dict(dedup=False, cache_slots=0),        # vanilla
+])
+def test_cached_engine_tiers(small_graphs, kwargs):
+    q = cycle_query(5)
+    db = small_graphs[2]
+    td, order = choose_plan(q, db.stats())
+    want = lftj_count(q, order, db)
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 10, **kwargs)
+    assert eng.count() == want
+
+
+def test_tier1_dedup_collapses_rows(small_graphs):
+    q = cycle_query(5)
+    db = small_graphs[2]
+    td, order = choose_plan(q, db.stats())
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 10)
+    eng.count()
+    assert eng.stats["tier1_rows_collapsed"] > 0
+
+
+def test_pallas_impl_in_engine(small_graphs):
+    """End-to-end count through the Pallas seek kernel (interpret mode)."""
+    q = path_query(4)
+    db = small_graphs[0]
+    td, order = choose_plan(q, db.stats())
+    want = lftj_count(q, order, db)
+    assert jax_lftj_count(q, order, db, capacity=512, impl="pallas") == want

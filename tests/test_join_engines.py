@@ -1,0 +1,61 @@
+"""Cross-engine equivalence: LFTJ / CLFTJ / YTD / brute force (counts and
+materialized results), plus cache-policy variants (paper Figs 1, 2, §5.1)."""
+import numpy as np
+import pytest
+
+from repro.core import (CachePolicy, choose_plan, clftj_count,
+                        clftj_evaluate, lftj_count, lftj_evaluate,
+                        ytd_count, ytd_evaluate, path_query, cycle_query,
+                        lollipop_query, random_graph_query)
+from repro.core.bruteforce import brute_force_evaluate
+
+QUERIES = [path_query(4), cycle_query(4), cycle_query(5),
+           lollipop_query(3, 2), random_graph_query(5, 0.5, seed=2)]
+
+
+def _remap(tups, order, variables):
+    idx = [list(order).index(x) for x in variables]
+    return {tuple(t[i] for i in idx) for t in tups}
+
+
+@pytest.mark.parametrize("qi", range(len(QUERIES)))
+def test_counts_and_evals_agree(small_graphs, qi):
+    q = QUERIES[qi]
+    for db in small_graphs:
+        td, order = choose_plan(q, db.stats())
+        want = brute_force_evaluate(q, db)
+        assert lftj_count(q, order, db) == len(want)
+        assert clftj_count(q, td, order, db) == len(want)
+        assert ytd_count(q, td, db) == len(want)
+        assert _remap(lftj_evaluate(q, order, db), order,
+                      q.variables) == want
+        assert _remap(clftj_evaluate(q, td, order, db), order,
+                      q.variables) == want
+        assert set(map(tuple, ytd_evaluate(q, td, db))) == want
+
+
+@pytest.mark.parametrize("policy", [
+    CachePolicy(support_threshold=2),
+    CachePolicy(capacity=4),
+    CachePolicy(capacity=2, evict="lru"),
+    CachePolicy(capacity=0),
+    CachePolicy(enabled_nodes=frozenset({1})),
+])
+def test_cache_policies_preserve_correctness(small_graphs, policy):
+    q = cycle_query(5)
+    db = small_graphs[1]
+    td, order = choose_plan(q, db.stats())
+    want = lftj_count(q, order, db)
+    assert clftj_count(q, td, order, db, policy) == want
+    got = clftj_evaluate(q, td, order, db, policy)
+    assert len(got) == want
+
+
+def test_bounded_cache_bounds_memory(small_graphs):
+    from repro.core.clftj_ref import CLFTJ
+    q = cycle_query(5)
+    db = small_graphs[2]
+    td, order = choose_plan(q, db.stats())
+    eng = CLFTJ(q, td, order, db, CachePolicy(capacity=3))
+    eng.count()
+    assert len(eng.cache) <= 3

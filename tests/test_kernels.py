@@ -1,0 +1,91 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU; see DESIGN.md §2 for the TPU tiling rationale)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.leapfrog import ops as lf_ops
+from repro.kernels.flash_attention import ops as fa_ops
+
+
+@pytest.mark.parametrize("n,m", [(0, 4), (1, 1), (7, 5), (100, 64),
+                                 (1000, 513), (4096, 700)])
+@pytest.mark.parametrize("dtype", [np.int32, np.int64])
+def test_leapfrog_bounds_sweep(n, m, dtype):
+    rng = np.random.default_rng(n * 1000 + m)
+    col = np.sort(rng.integers(0, max(2 * n, 4), size=n)).astype(dtype)
+    v = rng.integers(-3, max(2 * n, 4) + 3, size=m).astype(dtype)
+    lo = rng.integers(0, n + 1, size=m).astype(np.int32)
+    hi = np.minimum(n, lo + rng.integers(0, n + 1, size=m)).astype(np.int32)
+    want_l = np.array([lo[i] + np.searchsorted(col[lo[i]:hi[i]], v[i], "left")
+                       for i in range(m)])
+    want_u = np.array([lo[i] + np.searchsorted(col[lo[i]:hi[i]], v[i],
+                                               "right") for i in range(m)])
+    for impl in ("bsearch", "pallas", "ref"):
+        got_l = np.asarray(lf_ops.lower_bound(
+            jnp.asarray(col), jnp.asarray(v), jnp.asarray(lo),
+            jnp.asarray(hi), impl=impl))
+        got_u = np.asarray(lf_ops.upper_bound(
+            jnp.asarray(col), jnp.asarray(v), jnp.asarray(lo),
+            jnp.asarray(hi), impl=impl))
+        np.testing.assert_array_equal(got_l, want_l, err_msg=impl)
+        np.testing.assert_array_equal(got_u, want_u, err_msg=impl)
+
+
+CASES = [
+    # b, t, s, h, hkv, dh, causal, window, q_offset
+    (1, 8, 8, 4, 2, 16, True, None, 0),
+    (2, 16, 16, 4, 4, 32, True, None, 0),
+    (1, 8, 24, 4, 1, 16, True, None, 16),
+    (2, 32, 32, 6, 2, 16, True, 8, 0),
+    (1, 16, 16, 4, 2, 16, False, None, 0),
+    (2, 1, 40, 8, 2, 64, True, None, 39),
+    (1, 24, 24, 2, 2, 128, True, 16, 0),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    b, t, s, h, hkv, dh, causal, window, qoff = case
+    rng = np.random.default_rng(hash(case) % 2 ** 31)
+    q = jnp.asarray(rng.standard_normal((b, t, h, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), dtype)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    want = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=qoff, impl="ref")
+    for impl, kw in (("xla", dict(block_q=8, block_k=8)),
+                     ("pallas", dict(block_q=8, block_k=8))):
+        got = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                     q_offset=qoff, impl=impl, **kw)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol, err_msg=f"{impl} {case}")
+
+
+def test_flash_gradients_match_ref():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 16, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 16, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 16, 2, 16)), jnp.float32)
+    g_ref = jax.grad(lambda q: fa_ops.flash_attention(
+        q, k, v, impl="ref").sum())(q)
+    g_xla = jax.grad(lambda q: fa_ops.flash_attention(
+        q, k, v, impl="xla", block_q=8, block_k=8).sum())(q)
+    np.testing.assert_allclose(np.asarray(g_xla), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unrolled_equals_scanned():
+    """cost-probe mode (xla_unroll) must be numerically identical."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 32, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 32, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 32, 2, 16)), jnp.float32)
+    a = fa_ops.flash_attention(q, k, v, impl="xla", block_q=8, block_k=8)
+    b = fa_ops.flash_attention(q, k, v, impl="xla_unroll",
+                               block_q=8, block_k=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)

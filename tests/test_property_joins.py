@@ -1,0 +1,49 @@
+"""Property tests (hypothesis): on random databases and random queries,
+every engine agrees with brute force — the system's core invariant."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CachePolicy, choose_plan, clftj_count, lftj_count,
+                        ytd_count, cycle_query, path_query,
+                        random_graph_query)
+from repro.core.bruteforce import brute_force_count
+from repro.core.db import graph_db
+
+
+@st.composite
+def db_and_query(draw):
+    seed = draw(st.integers(0, 10 ** 6))
+    rng = np.random.default_rng(seed)
+    ne = draw(st.integers(5, 60))
+    nv = draw(st.integers(3, 12))
+    edges = rng.integers(0, nv, size=(ne, 2))
+    kind = draw(st.sampled_from(["path", "cycle", "rand"]))
+    if kind == "path":
+        q = path_query(draw(st.integers(3, 5)))
+    elif kind == "cycle":
+        q = cycle_query(draw(st.integers(3, 5)))
+    else:
+        q = random_graph_query(draw(st.integers(4, 5)), 0.6, seed=seed)
+    return graph_db(edges), q, seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(db_and_query())
+def test_all_engines_match_bruteforce(dq):
+    db, q, seed = dq
+    want = brute_force_count(q, db)
+    td, order = choose_plan(q, db.stats())
+    assert lftj_count(q, order, db) == want
+    assert clftj_count(q, td, order, db) == want
+    assert ytd_count(q, td, db) == want
+
+
+@settings(max_examples=10, deadline=None)
+@given(db_and_query(), st.integers(0, 6))
+def test_bounded_cache_invariant(dq, cap):
+    """Any capacity (even 0) must not change results — caching is optional
+    by construction (the paper's 'flexible' property)."""
+    db, q, seed = dq
+    td, order = choose_plan(q, db.stats())
+    want = lftj_count(q, order, db)
+    assert clftj_count(q, td, order, db, CachePolicy(capacity=cap)) == want

@@ -1,0 +1,52 @@
+"""Separator enumeration (paper §4.2): exactness, order, no repetition."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cq import cycle_query, lollipop_query, path_query, \
+    random_graph_query
+from repro.core.gaifman import gaifman_graph
+from repro.core.separators import (brute_force_constrained_separators,
+                                   enumerate_constrained_separators,
+                                   min_constrained_separator)
+
+
+QUERIES = [path_query(4), path_query(6), cycle_query(5), cycle_query(6),
+           lollipop_query(3, 2), random_graph_query(6, 0.5, seed=3)]
+
+
+@pytest.mark.parametrize("qi", range(len(QUERIES)))
+def test_enumeration_matches_bruteforce(qi):
+    g = gaifman_graph(QUERIES[qi])
+    for csize in (0, 1, 2):
+        C = set(sorted(g)[:csize])
+        got = list(enumerate_constrained_separators(g, C))
+        want = brute_force_constrained_separators(g, C)
+        assert set(got) == set(want)
+        assert len(got) == len(set(got)), "repetition"
+        sizes = [len(s) for s in got]
+        assert sizes == sorted(sizes), "must be emitted by increasing size"
+
+
+@pytest.mark.parametrize("qi", range(len(QUERIES)))
+def test_min_oracle_is_exact(qi):
+    g = gaifman_graph(QUERIES[qi])
+    C = set(sorted(g)[:1])
+    want = brute_force_constrained_separators(g, C)
+    m = min_constrained_separator(g, C)
+    if not want:
+        assert m is None
+    else:
+        assert m is not None and len(m) == len(want[0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 7), st.integers(0, 10_000))
+def test_property_enumeration_random_graphs(n, seed):
+    rng = np.random.default_rng(seed)
+    q = random_graph_query(n, float(rng.uniform(0.3, 0.8)), seed=seed)
+    g = gaifman_graph(q)
+    C = set(list(sorted(g))[: int(rng.integers(0, 3))])
+    got = list(enumerate_constrained_separators(g, C, max_size=3))
+    want = [s for s in brute_force_constrained_separators(g, C, max_size=3)]
+    assert set(got) == set(want)

@@ -1,0 +1,129 @@
+"""Substrate: optimizer, data pipeline, checkpointing, fault runtime,
+sharding rules."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.data import tokens as dtok
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.runtime.fault import PreemptionGuard, StragglerWatch
+from repro.sharding import rules as shr
+
+
+# --- optimizer -------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    cfg = adamw.OptConfig(lr=0.1, warmup_steps=0, decay_steps=100,
+                          weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw.init_state(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw.update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.OptConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(adamw.schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(adamw.schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(adamw.schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_grad_clipping():
+    cfg = adamw.OptConfig(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init_state(params)
+    _, _, m = adamw.update(cfg, params, {"w": jnp.asarray([30., 40., 0.])},
+                           state)
+    assert float(m["grad_norm"]) == pytest.approx(50.0)
+
+
+# --- data ------------------------------------------------------------------
+
+def test_data_deterministic_and_sharded():
+    cfg = dtok.DataConfig(vocab=97, seq_len=16, global_batch=8, seed=3)
+    a = dtok.batch_at(cfg, 5)
+    b = dtok.batch_at(cfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    s0 = dtok.batch_at(cfg, 5, shard=0, num_shards=2)
+    s1 = dtok.batch_at(cfg, 5, shard=1, num_shards=2)
+    assert s0["tokens"].shape == (4, 16)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    # learnable: most transitions follow the affine map
+    t = a["tokens"][:, :-1]
+    nxt = a["tokens"][:, 1:]
+    frac = np.mean(nxt == (cfg.a * t + cfg.c) % cfg.vocab)
+    assert frac > 0.7
+
+
+# --- checkpointing -----------------------------------------------------------
+
+def test_checkpoint_roundtrip_retention_and_resume(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, keep=2, async_save=False)
+    state = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 2))}}
+    for step in (1, 2, 3):
+        mgr.save(step, jax.tree.map(lambda x: x * step, state))
+    assert mgr.all_steps() == [2, 3]      # retention
+    step, restored, _ = mgr.restore(state)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(5) * 3)
+
+
+def test_checkpoint_async_and_struct_restore(tmp_path):
+    d = str(tmp_path / "ck2")
+    mgr = CheckpointManager(d, keep=1, async_save=True)
+    state = {"w": jnp.full((4,), 7.0)}
+    mgr.save(10, state)
+    mgr.wait()
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    step, restored, _ = mgr.restore(like)
+    assert step == 10 and float(restored["w"][0]) == 7.0
+
+
+# --- fault runtime -----------------------------------------------------------
+
+def test_straggler_watch_flags_slow_steps():
+    w = StragglerWatch(factor=3.0)
+    for _ in range(10):
+        w.observe(0.1)
+    assert w.observe(1.0) is True
+    assert w.flagged == 1
+    assert w.observe(0.1) is False
+
+
+def test_preemption_guard_stop_request():
+    g = PreemptionGuard()
+    assert not g.should_stop
+    g.request_stop()
+    assert g.should_stop
+
+
+# --- sharding rules ----------------------------------------------------------
+
+def _mesh22():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_partition_spec_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # divisible -> sharded on 1-sized axis is pointless; use a fake mesh math
+    spec = shr.partition_spec(("vocab", "embed"), (51865, 384), mesh)
+    assert spec == jax.sharding.PartitionSpec(None, None)
+
+
+def test_batch_sharding_divisibility():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # on a 1x1 mesh every batch divides; spec may name the size-1 axis
+    assert shr.batch_sharding(mesh, 3).spec in (P(), P("data"), P(("data",)))
+    # real divisibility fallback (B=1 on a >1 data axis) is covered by the
+    # multi-device subprocess tests in test_distributed.py

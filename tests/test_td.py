@@ -1,0 +1,72 @@
+"""Tree decompositions: validity, orders, enumeration (paper §2.3, §4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cq import (clique_query, cycle_query, lollipop_query,
+                           path_query, random_graph_query)
+from repro.core.decompose import (choose_plan, enumerate_tds,
+                                  generic_decompose, td_heuristic_key)
+from repro.core.td import TreeDecomposition, singleton_td
+
+QUERIES = [path_query(5), cycle_query(5), cycle_query(6),
+           lollipop_query(3, 2), clique_query(4),
+           random_graph_query(6, 0.5, seed=1)]
+
+
+@pytest.mark.parametrize("qi", range(len(QUERIES)))
+def test_generic_decompose_valid(qi):
+    q = QUERIES[qi]
+    td = generic_decompose(q)
+    td.validate(q)
+    order = td.strongly_compatible_order()
+    assert td.is_strongly_compatible(order)
+    assert td.is_compatible(order)
+
+
+@pytest.mark.parametrize("qi", range(len(QUERIES)))
+def test_enumerate_tds_all_valid(qi):
+    q = QUERIES[qi]
+    tds = enumerate_tds(q, max_adhesion=2, limit=12)
+    assert tds
+    for td in tds:
+        td.validate(q)
+        assert td.is_strongly_compatible(td.strongly_compatible_order())
+
+
+def test_clique_has_singleton_td():
+    q = clique_query(4)
+    tds = enumerate_tds(q, max_adhesion=2, limit=4)
+    assert all(td.num_nodes == 1 for td in tds), \
+        "cliques cannot be decomposed (paper §5.2.2)"
+
+
+def test_owner_and_adhesion_structure():
+    q = cycle_query(5)
+    td, order = choose_plan(q)
+    owners = td.owners()
+    pos = {x: i for i, x in enumerate(order)}
+    pre = {v: r for r, v in enumerate(td.preorder())}
+    for x, y in zip(order, order[1:]):
+        assert pre[owners[x]] <= pre[owners[y]]
+    # every non-root owns >= 1 variable (Plan.build requirement)
+    owned = set(owners.values())
+    for v in range(td.num_nodes):
+        if td.parent[v] >= 0:
+            assert v in owned
+
+
+def test_redundant_bag_elimination():
+    td = TreeDecomposition(
+        [frozenset({"a", "b"}), frozenset({"b"}), frozenset({"b", "c"})],
+        [-1, 0, 1])
+    out = td.eliminate_redundant_bags()
+    assert out.num_nodes == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 7), st.integers(0, 10_000))
+def test_property_plans_random_graphs(n, seed):
+    q = random_graph_query(n, 0.5, seed=seed)
+    td, order = choose_plan(q)
+    td.validate(q)
+    assert td.is_strongly_compatible(order)

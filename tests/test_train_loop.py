@@ -1,0 +1,42 @@
+"""Fault-tolerant training loop: crash/restart equivalence, preemption."""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data.tokens import DataConfig
+from repro.models import Model
+from repro.optim.adamw import OptConfig
+from repro.train.loop import LoopConfig, train
+from repro.train.train_step import TrainConfig
+
+
+def _setup():
+    cfg = get_arch("qwen2.5-3b-smoke")
+    model = Model(cfg)
+    data = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4, seed=1)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2,
+                                     decay_steps=30))
+    return model, data, tcfg
+
+
+def test_crash_resume_equals_straight_run(tmp_path):
+    model, data, tcfg = _setup()
+    lcfg1 = LoopConfig(total_steps=12, ckpt_every=6, log_every=100,
+                       ckpt_dir=str(tmp_path / "a"))
+    h1 = train(model, data, tcfg, lcfg1, log=lambda s: None)
+    lcfg2 = LoopConfig(total_steps=12, ckpt_every=6, log_every=100,
+                       ckpt_dir=str(tmp_path / "b"))
+    with pytest.raises(RuntimeError):
+        train(model, data, tcfg, lcfg2, log=lambda s: None, fail_at_step=7)
+    h2 = train(model, data, tcfg, lcfg2, log=lambda s: None)
+    np.testing.assert_allclose(h1["loss"][-6:], h2["loss"][-6:], rtol=1e-5)
+
+
+def test_loss_decreases(tmp_path):
+    model, data, tcfg = _setup()
+    lcfg = LoopConfig(total_steps=25, ckpt_every=100, log_every=100,
+                      ckpt_dir=str(tmp_path / "c"))
+    h = train(model, data, tcfg, lcfg, log=lambda s: None)
+    assert np.mean(h["loss"][-5:]) < np.mean(h["loss"][:5])
