@@ -1,17 +1,40 @@
 """Paper Fig 10: dynamic cache size.  CLFTJ count under bounded caches —
-speedup grows with capacity; even small caches deliver most of it."""
+speedup grows with capacity; even small caches deliver most of it.
+
+Two sweeps:
+
+* ``ref``: the host reference engine over capacity bounds (the paper's
+  figure as-is).
+* ``jax``: the vectorized engine over tier-2 policy × slot count on the
+  skewed-TD workload (bench_td_skew's zigzag cycle keyed on the Zipf
+  person attribute), reporting the per-policy hit rate — the signal the
+  dynamic sizing controller consumes.  At equal slots, set-associative
+  LRU should meet or beat direct-mapped (conflict misses on hot keys).
+"""
 from __future__ import annotations
 
-from repro.core import (CachePolicy, choose_plan, clftj_count, lftj_count,
-                        two_relation_cycle_query, cycle_query)
+from repro.core import (CacheConfig, CachePolicy, choose_plan, clftj_count,
+                        lftj_count, two_relation_cycle_query, cycle_query)
+from repro.core.cached_frontier import JaxCachedTrieJoin
 from repro.data.graphs import dataset
 
-from .common import run_ref
+from .bench_td_skew import TDS, skewed_db, zigzag_cycle
+from .common import run_jax_cached, run_ref
 
 CAPS = (0, 1_000, 10_000, 100_000, None)  # None = unbounded
 
+JAX_SLOTS = (256, 1024, 4096)
+JAX_POLICIES = (
+    ("direct", lambda s: CacheConfig(policy="direct", slots=s)),
+    ("assoc4", lambda s: CacheConfig(policy="setassoc", slots=s, assoc=4)),
+    ("cost4", lambda s: CacheConfig(policy="costaware", slots=s, assoc=4)),
+    ("adaptive", lambda s: CacheConfig(
+        policy="setassoc", slots=max(64, s // 4), assoc=4, dynamic=True,
+        budget=s, min_slots=64, resize_interval=4)),
+)
 
-def main() -> None:
+
+def ref_size_sweep() -> None:
     imdb = dataset("imdb-like")
     wiki = dataset("wiki-vote-like")
     cases = [
@@ -31,6 +54,29 @@ def main() -> None:
             label = "inf" if cap is None else str(cap)
             run_ref(f"fig10/{cname}/clftj-cap{label}",
                     lambda c: clftj_count(q, td, order, db, pol, c))
+
+
+def jax_policy_sweep(n: int = 4, capacity: int = 1 << 11) -> dict:
+    """Policy × slots hit-rate table on the skewed-TD workload; returns
+    {(policy, slots): hit_rate} for programmatic checks."""
+    db = skewed_db()
+    q = zigzag_cycle(n)
+    td = TDS[n]["TD1-person"]       # caches keyed on the skewed attribute
+    td.validate(q)
+    order = td.strongly_compatible_order()
+    rates = {}
+    for slots in JAX_SLOTS:
+        for pname, mk in JAX_POLICIES:
+            eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
+                                    cache=mk(slots))
+            rec = run_jax_cached(f"fig10jax/{n}-zigzag/{pname}-s{slots}", eng)
+            rates[(pname, slots)] = rec["hit_rate"]
+    return rates
+
+
+def main() -> None:
+    ref_size_sweep()
+    jax_policy_sweep()
 
 
 if __name__ == "__main__":

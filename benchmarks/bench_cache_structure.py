@@ -2,14 +2,18 @@
 
 All three TDs have width 2; they differ in adhesion *dimensions* —
 demonstrating that CLFTJ should target small adhesions, not just treewidth.
+The JAX section runs the same structures through the vectorized engine's
+pluggable tier-2 cache (``CacheConfig``), reporting per-structure hit rates
+so the device policies can be compared on identical plans.
 """
 from __future__ import annotations
 
-from repro.core import (TreeDecomposition, clftj_count, lftj_count,
-                        lollipop_query)
+from repro.core import (CacheConfig, TreeDecomposition, clftj_count,
+                        lftj_count, lollipop_query)
+from repro.core.cached_frontier import JaxCachedTrieJoin
 from repro.data.graphs import dataset
 
-from .common import run_ref
+from .common import run_jax_cached, run_ref
 
 F = frozenset
 
@@ -26,6 +30,12 @@ CS = {
                               F("x4 x5".split())], [-1, 0, 1]),
 }
 
+JAX_CONFIGS = (
+    ("direct", CacheConfig(policy="direct", slots=1024)),
+    ("assoc4", CacheConfig(policy="setassoc", slots=1024, assoc=4)),
+    ("cost4", CacheConfig(policy="costaware", slots=1024, assoc=4)),
+)
+
 
 def main() -> None:
     q = lollipop_query(3, 2)
@@ -39,6 +49,10 @@ def main() -> None:
             order = td.strongly_compatible_order()
             run_ref(f"fig11/{ds}/clftj-{name}",
                     lambda c: clftj_count(q, td, order, db, None, c))
+            for pname, cfg in JAX_CONFIGS:
+                eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 12,
+                                        cache=cfg)
+                run_jax_cached(f"fig11jax/{ds}/clftj-{name}-{pname}", eng)
 
 
 if __name__ == "__main__":

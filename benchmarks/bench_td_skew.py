@@ -48,10 +48,16 @@ TDS = {
 }
 
 
+def skewed_db(a_person: float = 1.3, a_movie: float = 0.4) -> Database:
+    """The Fig 13/14 IMDB-analogue: person attribute Zipf-skewed, movie
+    attribute flatter — shared by the cache-size/structure benchmarks."""
+    male = zipf_bipartite(4000, 2500, 12000, a_person, a_movie, seed=6)
+    female = zipf_bipartite(4000, 2500, 12000, a_person, a_movie, seed=7)
+    return Database({"male_cast": male, "female_cast": female})
+
+
 def main() -> None:
-    male = zipf_bipartite(4000, 2500, 12000, 1.3, 0.4, seed=6)
-    female = zipf_bipartite(4000, 2500, 12000, 1.3, 0.4, seed=7)
-    db = Database({"male_cast": male, "female_cast": female})
+    db = skewed_db()
     for n in (4, 6):
         q = zigzag_cycle(n)
         for tdname, td in TDS[n].items():

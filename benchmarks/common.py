@@ -43,3 +43,18 @@ def run_jax(name: str, fn: Callable[[], int]) -> Dict:
     dt = time.perf_counter() - t0
     emit(name, dt * 1e6, f"count={result}")
     return {"result": result, "seconds": dt}
+
+
+def run_jax_cached(name: str, eng) -> Dict:
+    """Time one JaxCachedTrieJoin.count() and emit its tier-2 stats."""
+    t0 = time.perf_counter()
+    result = eng.count()
+    dt = time.perf_counter() - t0
+    s = eng.stats
+    hit_rate = s["tier2_hits"] / max(1, s["tier2_probes"])
+    emit(name, dt * 1e6,
+         f"count={result};hit_rate={hit_rate:.4f};hits={s['tier2_hits']};"
+         f"probes={s['tier2_probes']};evict={s['tier2_evictions']};"
+         f"slots={s['tier2_slots']};resizes={s['tier2_resizes']};"
+         f"t1_collapsed={s['tier1_rows_collapsed']}")
+    return {"result": result, "seconds": dt, "hit_rate": hit_rate, **s}

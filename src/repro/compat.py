@@ -1,0 +1,20 @@
+"""Version-compat shims for the ``jax.tree`` namespace.
+
+``jax.tree.flatten_with_path`` / ``jax.tree.map_with_path`` only exist in
+newer jax releases; older ones (e.g. 0.4.37, this image) expose the same
+functions under ``jax.tree_util``.  Import the path-aware helpers from here
+so every module works on either side of the rename.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    tree_flatten_with_path = jax.tree.flatten_with_path
+except AttributeError:
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+try:
+    tree_map_with_path = jax.tree.map_with_path
+except AttributeError:
+    tree_map_with_path = jax.tree_util.tree_map_with_path

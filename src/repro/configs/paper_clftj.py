@@ -3,12 +3,15 @@
 These mirror the knobs of the paper's implementation (§5.1): cache bound
 (Fig 10), admission threshold (§3.4), adhesion-dimension cap (the paper's
 unordered_map supports <= 2 key attributes), TD-enumeration budget (§4.3) —
-plus the TPU-engine knobs (frontier capacity, tier-1 dedup).
+plus the TPU-engine knobs (frontier capacity, tier-1 dedup, and the tier-2
+device-cache policy/associativity/budget of ``core/cache.py``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional
+
+from ..core.cache import CacheConfig
 
 
 @dataclass(frozen=True)
@@ -19,12 +22,22 @@ class JoinEngineConfig:
     # host reference engine (paper Fig 2)
     support_threshold: int = 1     # §3.4 admission policy
     capacity: Optional[int] = None  # Fig 10 dynamic cache bound (None = inf)
-    evict: str = "none"            # none | lru
+    evict: str = "none"            # none | lru | cost
     # vectorized engine (DESIGN.md §2)
     frontier_capacity: int = 1 << 16
-    cache_slots: int = 1 << 16     # tier-2 direct-mapped table slots
+    cache_slots: int = 1 << 16     # tier-2 table slots (initial)
+    cache_policy: str = "direct"   # direct | setassoc | costaware
+    cache_assoc: int = 4           # ways per set (setassoc/costaware)
+    cache_dynamic: bool = False    # sizing controller on/off
+    cache_budget: Optional[int] = None  # max total slots across node tables
     dedup: bool = True             # tier-1 intra-chunk dedup
     impl: str = "bsearch"          # bsearch | pallas
+
+    def cache_config(self) -> CacheConfig:
+        """Tier-2 device-cache config for the vectorized engine."""
+        return CacheConfig(policy=self.cache_policy, slots=self.cache_slots,
+                           assoc=self.cache_assoc, dynamic=self.cache_dynamic,
+                           budget=self.cache_budget)
 
 
 PAPER_FAITHFUL = JoinEngineConfig(
@@ -33,3 +46,10 @@ PAPER_FAITHFUL = JoinEngineConfig(
 
 BOUNDED_100K = JoinEngineConfig(capacity=100_000)   # Fig 10 mid-point
 TPU_DEFAULT = JoinEngineConfig()
+
+# Flexible-cache presets (tier-2 policy sweep; DESIGN.md §2.3)
+TPU_SETASSOC = JoinEngineConfig(cache_policy="setassoc", cache_assoc=4)
+TPU_COST_AWARE = JoinEngineConfig(cache_policy="costaware", cache_assoc=4)
+TPU_ADAPTIVE = JoinEngineConfig(      # Fig 10's size knob made adaptive
+    cache_policy="setassoc", cache_assoc=4, cache_slots=1 << 10,
+    cache_dynamic=True, cache_budget=1 << 18)

@@ -7,7 +7,8 @@ Layers:
   * facade    — engine.count / engine.evaluate / engine.plan_query
 """
 from .cq import (CQ, Atom, cq, path_query, cycle_query, clique_query,
-                 lollipop_query, random_graph_query, two_relation_cycle_query)
+                 lollipop_query, random_graph_query, star_query,
+                 two_relation_cycle_query)
 from .db import Counters, Database, graph_db
 from .td import TreeDecomposition, singleton_td
 from .decompose import (choose_plan, enumerate_tds, generic_decompose,
@@ -16,6 +17,7 @@ from .clftj_ref import CLFTJ, CachePolicy, Plan
 from .lftj_ref import LFTJ, lftj_count, lftj_evaluate
 from .clftj_ref import clftj_count, clftj_evaluate
 from .yannakakis import YTD, ytd_count, ytd_evaluate
+from .cache import CacheConfig, CacheManager, DeviceCache
 from .frontier import JaxTrieJoin, jax_lftj_count, jax_lftj_evaluate
 from .cached_frontier import JaxCachedTrieJoin, jax_clftj_count
 from . import engine

@@ -1,0 +1,378 @@
+"""Pluggable tier-2 device cache for the vectorized CLFTJ (DESIGN.md §2.3).
+
+The paper's central knob is *flexibility*: "our solution balances memory
+usage and repeated computation" by choosing how much cache to keep and what
+to admit/evict (§3.4, Fig 10).  The frontier engine realizes the cache as
+device arrays updated with functional scatter/gather, so a "policy" here is
+a pair of jitted ops (probe, insert) over a fixed table layout:
+
+* ``direct``    — 1-way direct-mapped table: ``slot = hash(key) % S``;
+  collisions overwrite unconditionally (hardware-style, zero metadata).
+* ``setassoc``  — N-way set-associative with LRU within each set: a key may
+  live in any of ``assoc`` ways of its set; the victim is the invalid way
+  if one exists, else the least-recently-touched way.  Conflict misses on
+  skewed key distributions drop sharply vs ``direct`` at equal slot count.
+* ``costaware`` — set-associative layout, but the victim is the *cheapest*
+  resident entry and admission is refused when the incumbent is more
+  valuable than the candidate.  Cost is the cached subtree count — a proxy
+  for the recomputation a future hit would avoid (big subtrees are the
+  entries worth pinning).
+
+All policies are *caches of exact results*: correctness never depends on
+what is resident, only speed does (the paper's optionality property), so
+batched scatter collisions may drop arbitrary writers without harm.
+
+``CacheManager`` owns one ``DeviceCache`` per TD node and the **dynamic
+sizing controller** (the Fig 10 size knob made adaptive): between subtree
+launches it grows a table whose misses look like conflict pressure (low
+hit rate at high occupancy) while total slots stay within ``budget``, and
+shrinks tables whose occupancy stays low (memory handed back).  Resizing
+rehashes resident entries into the new table with one batched insert;
+entries lost to rehash collisions are a performance non-event by the
+optionality property above.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_MIX = np.int64(-7046029254386353131)  # 0x9E3779B97F4A7C15 as signed
+
+POLICIES = ("direct", "setassoc", "costaware")
+
+
+def _hash_sets(keys: jnp.ndarray, n_sets: int) -> jnp.ndarray:
+    h = keys * _MIX
+    h = h ^ (h >> 29)
+    return jnp.abs(h) % n_sets
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Tier-2 cache knobs (engine-facing; see DESIGN.md §2.3).
+
+    * ``policy``: "direct" | "setassoc" | "costaware".
+    * ``slots``: initial entries per node table (0 disables tier 2).
+    * ``assoc``: ways per set (ignored for "direct", which is 1-way).
+    * ``dynamic``: enable the sizing controller.
+    * ``budget``: max total slots summed over all node tables (None = only
+      bounded by ``max_slots`` per table); also the dynamic controller's
+      growth headroom.  Floor: every cached node keeps at least one set,
+      so with budget < nodes × ways the total can exceed it by that floor.
+    * ``min_slots``/``max_slots``: per-table resize clamps.
+    * ``resize_interval``: subtree launches between controller decisions.
+    * ``grow_below_hit_rate``: grow when window hit-rate is below this and
+      the table looks conflict-bound (occupancy > 1/2).
+    * ``shrink_below_occupancy``: shrink when occupancy stays under this.
+    * ``enabled_nodes``: restrict caching to these TD nodes (None = all).
+    """
+
+    policy: str = "direct"
+    slots: int = 1 << 16
+    assoc: int = 4
+    dynamic: bool = False
+    budget: Optional[int] = None
+    min_slots: int = 1 << 8
+    max_slots: int = 1 << 22
+    resize_interval: int = 8
+    grow_below_hit_rate: float = 0.5
+    shrink_below_occupancy: float = 0.125
+    enabled_nodes: Optional[frozenset] = None
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown cache policy {self.policy!r}; "
+                             f"expected one of {POLICIES}")
+        if self.assoc < 1:
+            raise ValueError("assoc must be >= 1")
+
+    @property
+    def ways(self) -> int:
+        return 1 if self.policy == "direct" else int(self.assoc)
+
+    def initial_slots(self) -> int:
+        s = int(self.slots)
+        if self.budget is not None:
+            s = min(s, int(self.budget))
+        if s <= 0:
+            return 0
+        # whole sets only; a positive request below one set rounds UP to a
+        # single set rather than silently disabling the cache
+        w = self.ways
+        return max(w, (s // w) * w)
+
+
+# ---------------------------------------------------------------------------
+# Jitted table ops.  Tables are (S, W) arrays: S sets, W ways.
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _probe(tkeys, tvals, tused, tstamp, keys, active, tick):
+    """Batched lookup; returns (hit, vals, stamp') — stamp' records the LRU
+    touch of every hit way (scatter-max, so duplicate rows are harmless)."""
+    n_sets = tkeys.shape[0]
+    sets = _hash_sets(keys, n_sets)
+    match = tused[sets] & (tkeys[sets] == keys[:, None]) & active[:, None]
+    hit = match.any(axis=1)
+    way = jnp.argmax(match, axis=1)
+    vals = jnp.where(hit, tvals[sets, way], 0)
+    stamp = tstamp.at[sets, way].max(jnp.where(hit, tick, -1))
+    return hit, vals, stamp
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "rounds"))
+def _insert(tkeys, tvals, tused, tstamp, tcost,
+            keys, vals, costs, active, tick, *, policy: str,
+            rounds: int = 1):
+    """Batched fill.  Victim selection per policy.
+
+    Each round elects exactly one writer per set (scatter-max of the row
+    index — duplicate-index scatters must not carry the write mask, or a
+    masked row's "keep old value" no-op can land after a real admit and
+    clobber it) and writes through per-set *unique* indices.  ``rounds``
+    (≈ the way count) re-reads the updated table so batch collisions retry
+    into the remaining ways instead of being dropped — without it an N-way
+    table admits N× fewer entries per launch than a direct-mapped one of
+    equal size."""
+    n_sets = tkeys.shape[0]
+    C = keys.shape[0]
+    rows = jnp.arange(C, dtype=jnp.int32)
+    sets = jnp.where(active, _hash_sets(keys, n_sets), 0)
+    remaining = active
+    n_admit = jnp.int32(0)
+    n_evict = jnp.int32(0)
+    for _ in range(max(1, rounds)):
+        way_used = tused[sets]                       # (C, W)
+        resident = way_used & (tkeys[sets] == keys[:, None])
+        rem = remaining & ~resident.any(axis=1)      # dup already admitted
+        any_free = ~way_used.all(axis=1)
+        free_way = jnp.argmin(way_used, axis=1)      # first invalid way
+        if policy == "costaware":
+            contested = jnp.argmin(jnp.where(way_used, tcost[sets],
+                                             jnp.int64(2 ** 62)), axis=1)
+        else:  # direct (W=1 → way 0) and setassoc both take the LRU way
+            contested = jnp.argmin(jnp.where(way_used, tstamp[sets],
+                                             jnp.int32(2 ** 31 - 1)), axis=1)
+        victim = jnp.where(any_free, free_way, contested)
+        admit = rem
+        if policy == "costaware":
+            incumbent = tcost[sets, victim]
+            admit = admit & (any_free | (costs >= incumbent))
+        # elect one admitted writer per set (highest row index)
+        winner = jnp.full((n_sets,), -1, jnp.int32).at[sets].max(
+            jnp.where(admit, rows, -1))
+        src = jnp.clip(winner, 0, C - 1)             # (S,) winning row
+        do_w = winner >= 0
+        sel = (jnp.arange(n_sets), victim[src])      # unique per set
+        tkeys = tkeys.at[sel].set(jnp.where(do_w, keys[src], tkeys[sel]))
+        tvals = tvals.at[sel].set(jnp.where(do_w, vals[src], tvals[sel]))
+        tcost = tcost.at[sel].set(jnp.where(do_w, costs[src], tcost[sel]))
+        tstamp = tstamp.at[sel].set(jnp.where(do_w, tick, tstamp[sel]))
+        tused = tused.at[sel].set(tused[sel] | do_w)
+        won = admit & (winner[sets] == rows)
+        n_admit = n_admit + jnp.sum(won.astype(jnp.int32))
+        n_evict = n_evict + jnp.sum((won & ~any_free).astype(jnp.int32))
+        remaining = rem & ~won
+    return tkeys, tvals, tused, tstamp, tcost, n_admit, n_evict
+
+
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DeviceCache:
+    """One node's table: functional arrays + host-side stats/controller."""
+
+    config: CacheConfig
+    keys: jnp.ndarray    # (S, W) int64
+    vals: jnp.ndarray    # (S, W) int64
+    used: jnp.ndarray    # (S, W) bool
+    stamp: jnp.ndarray   # (S, W) int32  — LRU clock (ticks)
+    cost: jnp.ndarray    # (S, W) int64  — recomputation-cost proxy
+    tick: int = 0
+    hits: int = 0
+    misses: int = 0
+    probes: int = 0
+    inserts: int = 0
+    evictions: int = 0
+    resizes: int = 0
+    # sliding window consumed by the sizing controller
+    window_hits: int = 0
+    window_probes: int = 0
+    window_launches: int = 0
+
+    @staticmethod
+    def create(config: CacheConfig,
+               slots: Optional[int] = None) -> "DeviceCache":
+        n = config.initial_slots() if slots is None else int(slots)
+        w = config.ways
+        s = max(1, n // w)
+        return DeviceCache(
+            config=config,
+            keys=jnp.zeros((s, w), jnp.int64),
+            vals=jnp.zeros((s, w), jnp.int64),
+            used=jnp.zeros((s, w), bool),
+            stamp=jnp.zeros((s, w), jnp.int32),
+            cost=jnp.zeros((s, w), jnp.int64))
+
+    # -- capacity ------------------------------------------------------
+    @property
+    def n_slots(self) -> int:
+        return int(self.keys.shape[0] * self.keys.shape[1])
+
+    def occupancy(self) -> int:
+        return int(jnp.sum(self.used))
+
+    # -- ops -----------------------------------------------------------
+    def probe(self, qkeys: jnp.ndarray,
+              active: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        self.tick += 1
+        hit, vals, stamp = _probe(self.keys, self.vals, self.used,
+                                  self.stamp, qkeys, active,
+                                  jnp.int32(self.tick))
+        self.stamp = stamp
+        n_active = int(jnp.sum(active))
+        n_hit = int(jnp.sum(hit))
+        self.probes += n_active
+        self.hits += n_hit
+        self.misses += n_active - n_hit
+        self.window_probes += n_active
+        self.window_hits += n_hit
+        return hit, vals
+
+    def insert(self, qkeys: jnp.ndarray, vals: jnp.ndarray,
+               active: jnp.ndarray,
+               costs: Optional[jnp.ndarray] = None) -> None:
+        self.tick += 1
+        if costs is None:  # default proxy: the count itself (clipped >= 1)
+            costs = jnp.maximum(vals, 1)
+        out = _insert(self.keys, self.vals, self.used, self.stamp, self.cost,
+                      qkeys, vals, costs.astype(jnp.int64), active,
+                      jnp.int32(self.tick), policy=self.config.policy,
+                      rounds=min(self.config.ways, 8))
+        (self.keys, self.vals, self.used, self.stamp, self.cost,
+         n_ins, n_evict) = out
+        self.inserts += int(n_ins)
+        self.evictions += int(n_evict)
+        self.window_launches += 1
+
+    # -- dynamic sizing (the paper's flexible-cache knob) --------------
+    def maybe_resize(self, headroom: Optional[int] = None) -> int:
+        """Controller step; returns the slot delta (0 = no change).
+
+        Grow ×2 when the window hit-rate is low *and* the table is mostly
+        full (conflict pressure — more slots can actually help); shrink ÷2
+        when occupancy stays below the configured floor (memory handed
+        back).  ``headroom`` caps growth (global budget minus slots already
+        spent elsewhere)."""
+        cfg = self.config
+        if not cfg.dynamic or self.window_launches < cfg.resize_interval:
+            return 0
+        probes, hits = self.window_probes, self.window_hits
+        self.window_hits = self.window_probes = self.window_launches = 0
+        if probes == 0:
+            return 0
+        hit_rate = hits / probes
+        occ = self.occupancy() / max(1, self.n_slots)
+        old = self.n_slots
+        new = old
+        if (hit_rate < cfg.grow_below_hit_rate and occ > 0.5
+                and old * 2 <= cfg.max_slots):
+            new = old * 2
+            if headroom is not None:
+                new = min(new, old + max(0, headroom))
+        elif occ < cfg.shrink_below_occupancy and old // 2 >= cfg.min_slots:
+            new = old // 2
+        new = (new // cfg.ways) * cfg.ways
+        if new <= 0 or new == old:
+            return 0
+        self._rehash(new)
+        self.resizes += 1
+        return self.n_slots - old
+
+    def _rehash(self, new_slots: int) -> None:
+        old_keys = self.keys.reshape(-1)
+        old_vals = self.vals.reshape(-1)
+        old_cost = self.cost.reshape(-1)
+        old_used = self.used.reshape(-1)
+        fresh = DeviceCache.create(self.config, new_slots)
+        self.keys, self.vals, self.used, self.stamp, self.cost = (
+            fresh.keys, fresh.vals, fresh.used, fresh.stamp, fresh.cost)
+        if not bool(old_used.any()):
+            return
+        # re-insert resident entries in one batched op; rehash collisions
+        # drop entries, which only costs future recomputation (optionality)
+        self.tick += 1
+        out = _insert(self.keys, self.vals, self.used, self.stamp, self.cost,
+                      old_keys, old_vals, old_cost, old_used,
+                      jnp.int32(self.tick), policy=self.config.policy,
+                      rounds=min(self.config.ways, 8))
+        self.keys, self.vals, self.used, self.stamp, self.cost = out[:5]
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "probes": self.probes, "inserts": self.inserts,
+                "evictions": self.evictions, "resizes": self.resizes,
+                "slots": self.n_slots, "occupancy": self.occupancy()}
+
+
+class CacheManager:
+    """Per-TD-node DeviceCaches under one global slot budget."""
+
+    def __init__(self, config: CacheConfig):
+        self.config = config
+        self.tables: Dict[int, DeviceCache] = {}
+        # engine hint: how many node tables will eventually exist, so the
+        # controller reserves their initial allocations out of the budget
+        # instead of letting the first-created table grow into all of it
+        self.expected_tables: Optional[int] = None
+
+    @property
+    def enabled(self) -> bool:
+        return self.config.initial_slots() > 0
+
+    def node_enabled(self, v: int) -> bool:
+        en = self.config.enabled_nodes
+        return self.enabled and (en is None or v in en)
+
+    def get(self, v: int) -> DeviceCache:
+        t = self.tables.get(v)
+        if t is None:
+            slots = self.config.initial_slots()
+            if self.config.budget is not None:
+                # node tables are created lazily: cap a newcomer by the
+                # remaining headroom so earlier growth cannot spend the
+                # whole budget (floor: one set, so the node still caches)
+                headroom = self.config.budget - self.total_slots()
+                slots = min(slots, max(self.config.ways, headroom))
+            t = DeviceCache.create(self.config, slots)
+            self.tables[v] = t
+        return t
+
+    def total_slots(self) -> int:
+        return sum(t.n_slots for t in self.tables.values())
+
+    def maybe_resize(self, v: int) -> int:
+        t = self.tables.get(v)
+        if t is None:
+            return 0
+        headroom = None
+        if self.config.budget is not None:
+            headroom = self.config.budget - self.total_slots()
+            if self.expected_tables is not None:
+                missing = max(0, self.expected_tables - len(self.tables))
+                headroom -= missing * self.config.initial_slots()
+        return t.maybe_resize(headroom)
+
+    def stats(self) -> Dict[str, int]:
+        agg = {"hits": 0, "misses": 0, "probes": 0, "inserts": 0,
+               "evictions": 0, "resizes": 0, "slots": 0, "occupancy": 0}
+        for t in self.tables.values():
+            for k, val in t.stats().items():
+                agg[k] += val
+        return agg

@@ -8,12 +8,14 @@ TPU-native realization of the paper's Figure 2 (see DESIGN.md §2):
   are scattered back as factor multipliers.  This is the paper's reuse
   executed as sort/segment data-parallel work, with zero persistent memory.
 
-* **Tier 2 — persistent bounded cache.**  A direct-mapped device table
-  (keys/values/valid arrays, K slots — the paper's *dynamic cache size* knob,
-  Fig 10) is probed before dedup and filled after the subtree completes.
-  Collisions overwrite (hardware-style direct mapping = an admission/eviction
-  policy; caching is optional so correctness is unaffected).  Per the paper's
-  own implementation, only adhesions of dimension <= 2 are cached.
+* **Tier 2 — persistent bounded cache.**  A pluggable device table per TD
+  node (``core/cache.py``) — the paper's *dynamic cache size* knob (Fig 10)
+  plus its admission/eviction flexibility (§3.4): direct-mapped,
+  set-associative-LRU, or cost-aware, with an optional sizing controller
+  that grows/shrinks tables between subtree launches under a slot budget.
+  Caching is optional so correctness is unaffected.  Per the paper's own
+  implementation, only adhesions of dimension <= 2 are cached (the packed
+  int64 key limit).
 
 Both tiers preserve LFTJ's guarantees: they only ever *skip recomputation of
 subtrees whose count is already known*, exactly like the paper's cache[α, μ|α].
@@ -21,7 +23,6 @@ subtrees whose count is already known*, exactly like the paper's cache[α, μ|α
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -30,13 +31,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
+from .cache import CacheConfig, CacheManager
 from .cq import CQ
 from .clftj_ref import Plan
 from .db import Database
 from .frontier import Frontier, JaxTrieJoin, MAX_KEY_BITS
 from .td import TreeDecomposition
-
-_MIX = np.int64(-7046029254386353131)  # 0x9E3779B97F4A7C15 as signed
 
 
 def _pack_keys(assign: jnp.ndarray, idx: Tuple[int, ...],
@@ -46,46 +46,6 @@ def _pack_keys(assign: jnp.ndarray, idx: Tuple[int, ...],
     for i in idx:
         key = (key << MAX_KEY_BITS) | assign[:, i].astype(jnp.int64)
     return key
-
-
-def _hash_slots(keys: jnp.ndarray, n_slots: int) -> jnp.ndarray:
-    h = keys * _MIX
-    h = h ^ (h >> 29)
-    return jnp.abs(h) % n_slots
-
-
-@dataclass
-class CacheTable:
-    """Direct-mapped device cache (functional updates)."""
-
-    keys: jnp.ndarray   # (K,) int64
-    vals: jnp.ndarray   # (K,) int64
-    used: jnp.ndarray   # (K,) bool
-    hits: int = 0
-    misses: int = 0
-
-    @staticmethod
-    def create(n_slots: int) -> "CacheTable":
-        return CacheTable(keys=jnp.zeros((n_slots,), jnp.int64),
-                          vals=jnp.zeros((n_slots,), jnp.int64),
-                          used=jnp.zeros((n_slots,), bool))
-
-
-@jax.jit
-def _cache_probe(tkeys, tvals, tused, keys, active):
-    slots = _hash_slots(keys, tkeys.shape[0])
-    hit = active & tused[slots] & (tkeys[slots] == keys)
-    return hit, jnp.where(hit, tvals[slots], 0)
-
-
-@jax.jit
-def _cache_insert(tkeys, tvals, tused, keys, vals, active):
-    slots = jnp.where(active, _hash_slots(keys, tkeys.shape[0]), 0)
-    # duplicate slots: arbitrary winner (scatter drop-semantics), acceptable
-    tkeys = tkeys.at[slots].set(jnp.where(active, keys, tkeys[slots]))
-    tvals = tvals.at[slots].set(jnp.where(active, vals, tvals[slots]))
-    tused = tused.at[slots].set(tused[slots] | active)
-    return tkeys, tvals, tused
 
 
 @jax.jit
@@ -143,32 +103,62 @@ def _segment_counts(exit_F: Frontier, n_slots: int) -> jnp.ndarray:
 
 
 class JaxCachedTrieJoin(JaxTrieJoin):
-    """CLFTJ over the frontier engine.  ``cache_slots=0`` disables tier 2;
-    ``dedup=False`` disables tier 1 (then it degenerates to vanilla LFTJ with
-    per-subtree counting)."""
+    """CLFTJ over the frontier engine.
+
+    Tier 2 is configured by ``cache`` (a :class:`CacheConfig`); the legacy
+    ``cache_slots`` int is still accepted and maps to a direct-mapped config
+    (``cache_slots=0`` disables tier 2).  ``dedup=False`` disables tier 1
+    (then it degenerates to vanilla LFTJ with per-subtree counting)."""
 
     def __init__(self, q: CQ, td: TreeDecomposition, order: Sequence[str],
                  db: Database, capacity: int = 1 << 17,
                  cache_slots: int = 1 << 16, dedup: bool = True,
                  impl: str = "bsearch",
-                 cached_nodes: Optional[frozenset] = None):
+                 cached_nodes: Optional[frozenset] = None,
+                 cache: Optional[CacheConfig] = None):
         super().__init__(q, order, db, capacity=capacity, impl=impl)
         self.plan = Plan.build(td, order)
         self.td = td
-        self.cache_slots = int(cache_slots)
+        if cache is None:
+            cache = CacheConfig(policy="direct", slots=int(cache_slots),
+                                enabled_nodes=cached_nodes)
+        elif cached_nodes is not None and cache.enabled_nodes is None:
+            from dataclasses import replace as _replace
+            cache = _replace(cache, enabled_nodes=cached_nodes)
         self.dedup = dedup
-        self.cached_nodes = cached_nodes
         maxval = max((int(r.max()) if r.size else 0) for r in self.atom_rows)
-        if maxval >= (1 << MAX_KEY_BITS):
-            # keys would not pack into 64 bits — disable tier-2 caching
-            self.cache_slots = 0
-        self.tables: Dict[int, CacheTable] = {}
+        # keys that don't pack into int64 fields would alias distinct
+        # adhesion assignments — both tiers must stay off (tier-1 dedup on
+        # corrupted keys could merge rows that are not duplicates)
+        self._keys_packable = maxval < (1 << MAX_KEY_BITS)
+        self.cache_config = cache
+        self.cache = CacheManager(cache)
+        self.cache.expected_tables = sum(
+            1 for v in range(td.num_nodes)
+            if td.parent[v] >= 0 and self._node_cacheable(v))
         self.stats = {"tier1_rows_collapsed": 0, "tier2_hits": 0,
-                      "tier2_probes": 0, "subtree_launches": 0}
+                      "tier2_misses": 0, "tier2_probes": 0,
+                      "tier2_inserts": 0, "tier2_evictions": 0,
+                      "tier2_resizes": 0, "tier2_slots": 0,
+                      "subtree_launches": 0}
+
+    @property
+    def cache_slots(self) -> int:
+        """Current total tier-2 slots (live tables, else the configured
+        initial size) — kept as a property for legacy callers."""
+        if self.cache.tables:
+            return self.cache.total_slots()
+        return self.cache_config.initial_slots()
 
     # -----------------------------------------------------------------
     def _node_cacheable(self, v: int) -> bool:
-        if self.cached_nodes is not None and v not in self.cached_nodes:
+        """Can node v's adhesion be keyed at all (tier 1 *or* tier 2)?
+        Independent of cache_slots: ``cache_slots=0`` disables only
+        tier 2, never tier-1 dedup."""
+        if not self._keys_packable:
+            return False
+        en = self.cache_config.enabled_nodes
+        if en is not None and v not in en:
             return False
         return len(self.plan.adhesion_idx[v]) <= 2
 
@@ -177,6 +167,16 @@ class JaxCachedTrieJoin(JaxTrieJoin):
             return []
         return list(range(self.plan.first_d[v], self.plan.last_d[v] + 1))
 
+    def _finalize_stats(self) -> None:
+        agg = self.cache.stats()
+        self.stats["tier2_hits"] = agg["hits"]
+        self.stats["tier2_misses"] = agg["misses"]
+        self.stats["tier2_probes"] = agg["probes"]
+        self.stats["tier2_inserts"] = agg["inserts"]
+        self.stats["tier2_evictions"] = agg["evictions"]
+        self.stats["tier2_resizes"] = agg["resizes"]
+        self.stats["tier2_slots"] = agg["slots"]
+
     # -----------------------------------------------------------------
     def count(self) -> int:
         with enable_x64():
@@ -184,6 +184,7 @@ class JaxCachedTrieJoin(JaxTrieJoin):
             for exitF in self._run_node(self.td.root,
                                         [self.initial_frontier()]):
                 total += int(jnp.sum(jnp.where(exitF.valid, exitF.factor, 0)))
+            self._finalize_stats()
             return total
 
     def _run_node(self, v: int, chunks: List[Frontier]) -> List[Frontier]:
@@ -207,17 +208,12 @@ class JaxCachedTrieJoin(JaxTrieJoin):
         C = self.capacity
         adh = self.plan.adhesion_idx[c]
         cacheable = self._node_cacheable(c)
-        use_t2 = cacheable and self.cache_slots > 0
+        use_t2 = cacheable and self.cache.enabled
         use_t1 = self.dedup and cacheable
 
         keys = _pack_keys(F.assign, adh, c) if cacheable else None
         if use_t2:
-            table = self.tables.setdefault(
-                c, CacheTable.create(self.cache_slots))
-            hit, hvals = _cache_probe(table.keys, table.vals, table.used,
-                                      keys, F.valid)
-            self.stats["tier2_probes"] += int(jnp.sum(F.valid))
-            self.stats["tier2_hits"] += int(jnp.sum(hit))
+            hit, hvals = self.cache.get(c).probe(keys, F.valid)
         else:
             hit = jnp.zeros((C,), bool)
             hvals = jnp.zeros((C,), jnp.int64)
@@ -243,10 +239,8 @@ class JaxCachedTrieJoin(JaxTrieJoin):
         if use_t2:
             rep_keys = keys[jnp.clip(first_idx, 0, C - 1)] if use_t1 else keys
             rep_active = (jnp.arange(C) < n_reps) if use_t1 else active
-            t = self.tables[c]
-            nk, nv, nu = _cache_insert(t.keys, t.vals, t.used,
-                                       rep_keys, cnt, rep_active)
-            self.tables[c] = CacheTable(nk, nv, nu)
+            self.cache.get(c).insert(rep_keys, cnt, rep_active)
+            self.cache.maybe_resize(c)
 
         return _apply_counts(F, hit, hvals, rep_of_row, cnt)
 
@@ -254,7 +248,8 @@ class JaxCachedTrieJoin(JaxTrieJoin):
 def jax_clftj_count(q: CQ, td: TreeDecomposition, order: Sequence[str],
                     db: Database, capacity: int = 1 << 17,
                     cache_slots: int = 1 << 16, dedup: bool = True,
-                    impl: str = "bsearch") -> int:
+                    impl: str = "bsearch",
+                    cache: Optional[CacheConfig] = None) -> int:
     return JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
                              cache_slots=cache_slots, dedup=dedup,
-                             impl=impl).count()
+                             impl=impl, cache=cache).count()

@@ -12,6 +12,7 @@ factorized intermediate) and replays them on a hit.
 """
 from __future__ import annotations
 
+import heapq
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
@@ -30,18 +31,30 @@ class CachePolicy:
       least this many times (1 = cache every intermediate result, the paper's
       default configuration).
     * ``capacity``: max resident entries (Fig 10's dynamic cache size); when
-      full, ``evict`` decides: "none" stops admitting, "lru" evicts.
+      full, ``evict`` decides: "none" stops admitting, "lru" evicts the
+      least-recently-used entry, "cost" evicts the cheapest resident entry
+      — but only when the candidate is at least as valuable (its count, a
+      proxy for the recomputation a future hit avoids).
     * ``enabled_nodes``: restrict caching to specific TD nodes (Fig 11's
       cache-structure experiments); None = all non-root nodes.
     """
 
     support_threshold: int = 1
     capacity: Optional[int] = None
-    evict: str = "none"  # "none" | "lru"
+    evict: str = "none"  # "none" | "lru" | "cost"
     enabled_nodes: Optional[frozenset] = None
 
     def node_enabled(self, v: int) -> bool:
         return self.enabled_nodes is None or v in self.enabled_nodes
+
+    @classmethod
+    def from_cache_config(cls, cfg) -> "CachePolicy":
+        """Host-engine analogue of a device :class:`~.cache.CacheConfig`:
+        bounded table, eviction flavor matched to the device policy."""
+        cap = cfg.budget if cfg.budget is not None else cfg.slots
+        return cls(capacity=int(cap),
+                   evict="cost" if cfg.policy == "costaware" else "lru",
+                   enabled_nodes=cfg.enabled_nodes)
 
 
 class Cache:
@@ -50,6 +63,9 @@ class Cache:
         self.counters = counters
         self.store: "OrderedDict[Tuple[int, Tuple[int, ...]], object]" = OrderedDict()
         self.support: Dict[Tuple[int, Tuple[int, ...]], int] = {}
+        # "cost" eviction: lazy min-heap of (cost, key); stale entries
+        # (evicted or re-inserted at a new cost) are dropped on pop
+        self._cost_heap: List[Tuple[int, Tuple[int, Tuple[int, ...]]]] = []
 
     def probe(self, v: int, key: Tuple[int, ...]):
         self.counters.count_hash()
@@ -63,6 +79,22 @@ class Cache:
         self.counters.cache_misses += 1
         return None
 
+    @staticmethod
+    def _cost(value) -> int:
+        """Recomputation-cost proxy: the count (or the number of recorded
+        subtree assignments in evaluation mode)."""
+        n = len(value) if isinstance(value, list) else int(value)
+        return max(1, n)
+
+    def _cheapest(self) -> Optional[Tuple[int, Tuple[int, Tuple[int, ...]]]]:
+        """Peek the valid minimum-cost resident entry (amortized O(log n))."""
+        while self._cost_heap:
+            c, k = self._cost_heap[0]
+            if k in self.store and self._cost(self.store[k]) == c:
+                return c, k
+            heapq.heappop(self._cost_heap)
+        return None
+
     def put(self, v: int, key: Tuple[int, ...], value) -> None:
         if not self.policy.node_enabled(v):
             self.counters.cache_skipped += 1
@@ -72,14 +104,26 @@ class Cache:
             self.counters.cache_skipped += 1
             return
         if self.policy.capacity is not None and len(self.store) >= self.policy.capacity:
+            if self.policy.capacity == 0:
+                self.counters.cache_skipped += 1
+                return
             if self.policy.evict == "lru":
                 self.store.popitem(last=False)
+            elif self.policy.evict == "cost":
+                cheapest = self._cheapest()
+                if cheapest is None or self._cost(value) < cheapest[0]:
+                    self.counters.cache_skipped += 1
+                    return
+                heapq.heappop(self._cost_heap)
+                del self.store[cheapest[1]]
             else:
                 self.counters.cache_skipped += 1
                 return
         self.counters.cache_inserts += 1
         self.counters.count_hash()
         self.store[k] = value
+        if self.policy.evict == "cost":
+            heapq.heappush(self._cost_heap, (self._cost(value), k))
 
     def __len__(self) -> int:
         return len(self.store)

@@ -114,6 +114,17 @@ def lollipop_query(clique_size: int = 3, tail_len: int = 2,
     return CQ(tuple(atoms))
 
 
+def star_query(rays: int, relation: str = "E") -> CQ:
+    """k-star: E(x1,x2), E(x1,x3), ..., E(x1,x{k+1}) — hub x1, k rays.
+
+    Acyclic with singleton adhesions ({x1}); the extreme cache-friendly
+    shape (every ray subtree keys on the hub value alone)."""
+    if rays < 1:
+        raise ValueError("star needs >= 1 ray")
+    return CQ(tuple(Atom(relation, (_vname(1), _vname(i + 2)))
+                    for i in range(rays)))
+
+
 def random_graph_query(n: int, p: float, seed: int,
                        relation: str = "E") -> CQ:
     """Erdős–Rényi query graph, connected, no self edges (paper §5.2.2).

@@ -23,9 +23,10 @@ from jax.experimental import enable_x64
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .cached_frontier import (JaxCachedTrieJoin, _apply_counts, _cache_insert,
-                              _cache_probe, _dedup, _make_rep_frontier,
-                              _pack_keys, _segment_counts)
+from .cache import CacheConfig, _insert as _cache_insert, \
+    _probe as _cache_probe
+from .cached_frontier import (JaxCachedTrieJoin, _apply_counts, _dedup,
+                              _make_rep_frontier, _pack_keys, _segment_counts)
 from .cq import CQ
 from .db import Database
 from .frontier import Frontier
@@ -33,18 +34,27 @@ from .td import TreeDecomposition
 
 
 class StaticCLFTJ(JaxCachedTrieJoin):
-    """Jittable fixed-capacity CLFTJ (no host-side morsel splitting)."""
+    """Jittable fixed-capacity CLFTJ (no host-side morsel splitting).
+
+    Tier-2 tables are (S, W) arrays per the configured :class:`CacheConfig`
+    policy; each shard keeps a private table (no coherence traffic) and the
+    LRU tick is a static counter baked in by the unrolled TD recursion."""
 
     # -----------------------------------------------------------------
     def count_fn(self):
         """Returns a pure fn(frontier0) -> (count, overflow)."""
+        cfg = self.cache_config
+        n_sets = max(1, cfg.initial_slots() // cfg.ways)
 
         def fn(F0: Frontier):
-            tables = {c: (jnp.zeros((self.cache_slots,), jnp.int64),
-                          jnp.zeros((self.cache_slots,), jnp.int64),
-                          jnp.zeros((self.cache_slots,), bool))
+            tables = {c: (jnp.zeros((n_sets, cfg.ways), jnp.int64),
+                          jnp.zeros((n_sets, cfg.ways), jnp.int64),
+                          jnp.zeros((n_sets, cfg.ways), bool),
+                          jnp.zeros((n_sets, cfg.ways), jnp.int32),
+                          jnp.zeros((n_sets, cfg.ways), jnp.int64))
                       for c in range(self.td.num_nodes)
-                      if self.cache_slots > 0 and self._node_cacheable(c)}
+                      if cfg.initial_slots() > 0 and self._node_cacheable(c)}
+            self._tick = 0
             exits, ov, tables = self._static_node(self.td.root, F0,
                                                   jnp.zeros((), bool), tables)
             total = jnp.sum(jnp.where(exits.valid, exits.factor, 0))
@@ -69,8 +79,12 @@ class StaticCLFTJ(JaxCachedTrieJoin):
 
         keys = _pack_keys(F.assign, adh, c) if cacheable else None
         if use_t2:
-            tk, tv, tu = tables[c]
-            hit, hvals = _cache_probe(tk, tv, tu, keys, F.valid)
+            tk, tv, tu, ts, tc = tables[c]
+            self._tick += 1
+            hit, hvals, ts = _cache_probe(tk, tv, tu, ts, keys, F.valid,
+                                          jnp.int32(self._tick))
+            tables = dict(tables)
+            tables[c] = (tk, tv, tu, ts, tc)
         else:
             hit = jnp.zeros((C,), bool)
             hvals = jnp.zeros((C,), jnp.int64)
@@ -88,8 +102,14 @@ class StaticCLFTJ(JaxCachedTrieJoin):
         if use_t2:
             rep_keys = keys[jnp.clip(first_idx, 0, C - 1)] if use_t1 else keys
             rep_active = (jnp.arange(C) < n_reps) if use_t1 else active
+            self._tick += 1
+            out = _cache_insert(*tables[c], rep_keys, cnt,
+                                jnp.maximum(cnt, 1), rep_active,
+                                jnp.int32(self._tick),
+                                policy=self.cache_config.policy,
+                                rounds=min(self.cache_config.ways, 8))
             tables = dict(tables)
-            tables[c] = _cache_insert(*tables[c], rep_keys, cnt, rep_active)
+            tables[c] = out[:5]
         return _apply_counts(F, hit, hvals, rep_of_row, cnt), ov, tables
 
 
@@ -97,7 +117,8 @@ def make_distributed_count(q: CQ, td: TreeDecomposition,
                            order: Sequence[str], db: Database, mesh: Mesh,
                            capacity: int = 1 << 14,
                            cache_slots: int = 1 << 15,
-                           axes: Tuple[str, ...] = ("data",)):
+                           axes: Tuple[str, ...] = ("data",),
+                           cache: Optional[CacheConfig] = None):
     """Build (jitted_fn, engine).  ``jitted_fn()`` -> (count, overflow).
 
     Work partition: shard i of D takes top-level guard runs
@@ -105,7 +126,7 @@ def make_distributed_count(q: CQ, td: TreeDecomposition,
     final count is a psum over the mesh axes — the single collective.
     """
     eng = StaticCLFTJ(q, td, order, db, capacity=capacity,
-                      cache_slots=cache_slots)
+                      cache_slots=cache_slots, cache=cache)
     g_ai, g_lvl = eng.at_depth[0][eng.guard[0]]
     rs = eng.levels[g_ai][g_lvl].runstarts
     nruns = rs.shape[0]
@@ -138,4 +159,25 @@ def make_distributed_count(q: CQ, td: TreeDecomposition,
 
     fn = shard_map(per_shard, mesh=mesh, in_specs=(),
                    out_specs=(P(), P()), check_rep=False)
-    return jax.jit(fn), eng
+    return _X64Jit(fn), eng
+
+
+class _X64Jit:
+    """jit wrapper that traces/lowers under enable_x64.
+
+    The shard body builds int64 counts/keys, so the x64 scope must cover
+    tracing *and* lowering; entering it only inside the traced function
+    leaves lowering (triggered by the first call or ``.lower()`` outside
+    any scope) with mixed 32/64-bit IR that fails stablehlo verification.
+    """
+
+    def __init__(self, fn):
+        self._jit = jax.jit(fn)
+
+    def __call__(self, *args, **kwargs):
+        with enable_x64():
+            return self._jit(*args, **kwargs)
+
+    def lower(self, *args, **kwargs):
+        with enable_x64():
+            return self._jit.lower(*args, **kwargs)

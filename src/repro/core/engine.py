@@ -12,6 +12,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .cache import CacheConfig
 from .cq import CQ
 from .clftj_ref import CLFTJ, CachePolicy
 from .cached_frontier import JaxCachedTrieJoin
@@ -48,7 +49,12 @@ def count(q: CQ, db: Database, algorithm: str = "clftj",
           order: Optional[Sequence[str]] = None,
           policy: Optional[CachePolicy] = None,
           capacity: int = 1 << 16, cache_slots: int = 1 << 16,
-          dedup: bool = True, impl: str = "bsearch") -> Result:
+          dedup: bool = True, impl: str = "bsearch",
+          cache: Optional[CacheConfig] = None) -> Result:
+    """Count ``q`` over ``db``.  ``cache`` configures the tier-2 cache of the
+    JAX engine (policy / associativity / slots / dynamic budget); for the
+    ``ref`` backend it is mapped onto the paper's :class:`CachePolicy`
+    unless an explicit ``policy`` is given."""
     import time
     t0 = time.perf_counter()
     counters = Counters()
@@ -61,10 +67,12 @@ def count(q: CQ, db: Database, algorithm: str = "clftj",
         if backend == "jax":
             eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
                                     cache_slots=cache_slots, dedup=dedup,
-                                    impl=impl)
+                                    impl=impl, cache=cache)
             c = eng.count()
             counters_out = dict(eng.stats)
         else:
+            if policy is None and cache is not None:
+                policy = CachePolicy.from_cache_config(cache)
             c = CLFTJ(q, td, order, db, policy, counters).count()
             counters_out = counters.snapshot()
     elif algorithm == "lftj":

@@ -42,7 +42,9 @@ def _bound_kernel(v_ref, lo_ref, hi_ref, col_ref, out_ref, *,
     pos = base + jax.lax.broadcasted_iota(jnp.int32, (v.shape[0], block_c), 1)
     cmp = (col[None, :] < v[:, None]) if strict else (col[None, :] <= v[:, None])
     mask = cmp & (pos >= lo[:, None]) & (pos < hi[:, None]) & (pos < n_valid)
-    partial = jnp.sum(mask.astype(jnp.int32), axis=1)
+    # pin the accumulator dtype: under enable_x64 jnp.sum would promote
+    # int32 to int64 and the store into the int32 out_ref would fail
+    partial = jnp.sum(mask.astype(jnp.int32), axis=1, dtype=jnp.int32)
 
     @pl.when(j == 0)
     def _init():

@@ -1,0 +1,195 @@
+"""Tier-2 cache subsystem (core/cache.py): policy × size correctness and
+accounting invariants.
+
+The paper's flexibility property is that caching is *optional*: any policy
+at any size (including 0 = disabled) must produce exactly the count of the
+cache-free engine.  The accounting invariant hits + misses == probes is
+what the dynamic sizing controller steers on, so it is load-bearing."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core import (CacheConfig, CachePolicy, choose_plan, clftj_count,
+                        cycle_query, lftj_count, lollipop_query, star_query)
+from repro.core.cache import DeviceCache
+from repro.core.cached_frontier import JaxCachedTrieJoin
+
+POLICY_CONFIGS = [
+    CacheConfig(policy="direct", slots=0),          # disabled
+    CacheConfig(policy="direct", slots=64),
+    CacheConfig(policy="direct", slots=1 << 12),
+    CacheConfig(policy="setassoc", slots=64, assoc=4),
+    CacheConfig(policy="setassoc", slots=1 << 12, assoc=8),
+    CacheConfig(policy="costaware", slots=64, assoc=2),
+    CacheConfig(policy="costaware", slots=1 << 12, assoc=4),
+    CacheConfig(policy="setassoc", slots=64, assoc=4, dynamic=True,
+                budget=1 << 12, min_slots=16, resize_interval=2),
+]
+
+
+def _ids(cfg: CacheConfig) -> str:
+    tag = f"{cfg.policy}-s{cfg.slots}-w{cfg.ways}"
+    return tag + ("-dyn" if cfg.dynamic else "")
+
+
+@pytest.mark.parametrize("cfg", POLICY_CONFIGS, ids=_ids)
+@pytest.mark.parametrize("qf", [lambda: cycle_query(5),
+                                lambda: lollipop_query(3, 2),
+                                lambda: star_query(3)])
+def test_policy_and_size_never_change_counts(small_graphs, cfg, qf):
+    """Every policy × slots point == the cache-free, dedup-free engine."""
+    q = qf()
+    db = small_graphs[2]
+    td, order = choose_plan(q, db.stats())
+    baseline = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9,
+                                 dedup=False, cache_slots=0).count()
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9, cache=cfg)
+    assert eng.count() == baseline
+
+
+@pytest.mark.parametrize("cfg", POLICY_CONFIGS, ids=_ids)
+def test_probe_accounting_invariant(small_graphs, cfg):
+    """tier2_hits + tier2_misses == tier2_probes, for every policy."""
+    q = cycle_query(5)
+    db = small_graphs[2]
+    td, order = choose_plan(q, db.stats())
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9, cache=cfg)
+    eng.count()
+    s = eng.stats
+    assert s["tier2_hits"] + s["tier2_misses"] == s["tier2_probes"]
+    if cfg.slots == 0:
+        assert s["tier2_probes"] == 0 and s["tier2_slots"] == 0
+
+
+def test_dynamic_sizing_respects_budget_and_resizes(small_graphs):
+    q = cycle_query(5)
+    db = small_graphs[2]
+    td, order = choose_plan(q, db.stats())
+    cfg = CacheConfig(policy="setassoc", slots=16, assoc=4, dynamic=True,
+                      budget=256, min_slots=8, resize_interval=1,
+                      grow_below_hit_rate=1.0)  # always under target → grow
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 8, cache=cfg)
+    want = lftj_count(q, order, db)
+    assert eng.count() == want
+    assert eng.stats["tier2_resizes"] > 0
+    # hard budget (the one-set-per-node floor is far below 256 here)
+    assert eng.cache.total_slots() <= 256
+    for t in eng.cache.tables.values():
+        assert t.n_slots <= cfg.max_slots
+
+
+def test_device_cache_set_fills_all_ways_and_hits():
+    """A batch of same-set keys must fill every way, not just one (the
+    multi-round insert), and then hit on re-probe."""
+    with enable_x64():
+        from repro.core.cache import _hash_sets
+        cfg = CacheConfig(policy="setassoc", slots=16, assoc=4)
+        t = DeviceCache.create(cfg)
+        n_sets = t.keys.shape[0]
+        ks, k = [], 1
+        while len(ks) < 4:  # 4 distinct keys, all in set 0
+            if int(_hash_sets(jnp.asarray([k], jnp.int64), n_sets)[0]) == 0:
+                ks.append(k)
+            k += 1
+        keys = jnp.asarray(ks, jnp.int64)
+        vals = jnp.arange(4, dtype=jnp.int64) + 10
+        t.insert(keys, vals, jnp.ones(4, bool))
+        assert t.occupancy() == 4 and bool(t.used[0].all())
+        hit, got = t.probe(keys, jnp.ones(4, bool))
+        assert bool(hit.all())
+        assert np.asarray(got).tolist() == [10, 11, 12, 13]
+        assert t.hits + t.misses == t.probes == 4
+
+
+def test_device_cache_lru_evicts_oldest():
+    with enable_x64():
+        from repro.core.cache import _hash_sets
+        cfg = CacheConfig(policy="setassoc", slots=8, assoc=2)
+        t = DeviceCache.create(cfg)
+        n_sets = t.keys.shape[0]
+        ks, k = [], 1
+        while len(ks) < 3:
+            if int(_hash_sets(jnp.asarray([k], jnp.int64), n_sets)[0]) == 0:
+                ks.append(k)
+            k += 1
+        one = jnp.ones(1, bool)
+        t.insert(jnp.asarray(ks[:1], jnp.int64), jnp.asarray([1], jnp.int64),
+                 one)
+        t.insert(jnp.asarray(ks[1:2], jnp.int64), jnp.asarray([2], jnp.int64),
+                 one)
+        t.probe(jnp.asarray(ks[:1], jnp.int64), one)   # touch key0 → key1 LRU
+        t.insert(jnp.asarray(ks[2:3], jnp.int64), jnp.asarray([3], jnp.int64),
+                 one)                                   # evicts key1
+        hit0, _ = t.probe(jnp.asarray(ks[:1], jnp.int64), one)
+        hit1, _ = t.probe(jnp.asarray(ks[1:2], jnp.int64), one)
+        hit2, _ = t.probe(jnp.asarray(ks[2:3], jnp.int64), one)
+        assert bool(hit0[0]) and bool(hit2[0]) and not bool(hit1[0])
+        assert t.evictions == 1
+
+
+def test_device_cache_costaware_protects_expensive():
+    with enable_x64():
+        from repro.core.cache import _hash_sets
+        cfg = CacheConfig(policy="costaware", slots=4, assoc=1)
+        t = DeviceCache.create(cfg)
+        n_sets = t.keys.shape[0]
+        ks, k = [], 1
+        while len(ks) < 2:
+            if int(_hash_sets(jnp.asarray([k], jnp.int64), n_sets)[0]) == 0:
+                ks.append(k)
+            k += 1
+        one = jnp.ones(1, bool)
+        t.insert(jnp.asarray(ks[:1], jnp.int64),
+                 jnp.asarray([1000], jnp.int64), one)   # expensive resident
+        t.insert(jnp.asarray(ks[1:2], jnp.int64),
+                 jnp.asarray([1], jnp.int64), one)      # cheap: refused
+        hit0, v = t.probe(jnp.asarray(ks[:1], jnp.int64), one)
+        hit1, _ = t.probe(jnp.asarray(ks[1:2], jnp.int64), one)
+        assert bool(hit0[0]) and int(v[0]) == 1000 and not bool(hit1[0])
+
+
+def test_tier1_dedup_independent_of_tier2(small_graphs):
+    """cache_slots=0 disables only tier 2 — tier-1 dedup must still run."""
+    q = cycle_query(5)
+    db = small_graphs[2]
+    td, order = choose_plan(q, db.stats())
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 10,
+                            cache_slots=0, dedup=True)
+    assert eng.count() == lftj_count(q, order, db)
+    assert eng.stats["tier1_rows_collapsed"] > 0
+    assert eng.stats["tier2_probes"] == 0
+
+
+def test_sub_associativity_slots_round_up_to_one_set(small_graphs):
+    """A positive slots request below one set must not silently disable
+    the cache."""
+    cfg = CacheConfig(policy="setassoc", slots=2, assoc=4)
+    assert cfg.initial_slots() == 4
+    q = cycle_query(5)
+    db = small_graphs[2]
+    td, order = choose_plan(q, db.stats())
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9, cache=cfg)
+    assert eng.count() == lftj_count(q, order, db)
+    assert eng.stats["tier2_probes"] > 0
+
+
+def test_ref_engine_cost_policy_matches(small_graphs):
+    """Host-engine analogue: 'cost' eviction preserves counts too."""
+    q = cycle_query(5)
+    db = small_graphs[1]
+    td, order = choose_plan(q, db.stats())
+    want = lftj_count(q, order, db)
+    for cap in (0, 2, 8):
+        pol = CachePolicy(capacity=cap, evict="cost")
+        assert clftj_count(q, td, order, db, pol) == want
+
+
+def test_cache_policy_from_cache_config():
+    pol = CachePolicy.from_cache_config(
+        CacheConfig(policy="costaware", slots=128, assoc=4))
+    assert pol.evict == "cost" and pol.capacity == 128
+    pol = CachePolicy.from_cache_config(
+        CacheConfig(policy="setassoc", slots=64, budget=32))
+    assert pol.evict == "lru" and pol.capacity == 32

@@ -1,7 +1,11 @@
-"""Property tests (hypothesis): on random databases and random queries,
-every engine agrees with brute force — the system's core invariant."""
+"""Property tests: on random databases and random queries, every engine
+agrees with brute force — the system's core invariant.
+
+Runs under hypothesis when it is installed; otherwise the same generators
+are driven by a fixed deterministic seed corpus so the core assertions
+always execute (hypothesis is an optional dev dependency)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import (CachePolicy, choose_plan, clftj_count, lftj_count,
                         ytd_count, cycle_query, path_query,
@@ -9,28 +13,30 @@ from repro.core import (CachePolicy, choose_plan, clftj_count, lftj_count,
 from repro.core.bruteforce import brute_force_count
 from repro.core.db import graph_db
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
 
-@st.composite
-def db_and_query(draw):
-    seed = draw(st.integers(0, 10 ** 6))
+
+def _make_case(seed: int):
+    """Deterministic (db, query) sample — shared by both drivers."""
     rng = np.random.default_rng(seed)
-    ne = draw(st.integers(5, 60))
-    nv = draw(st.integers(3, 12))
+    ne = int(rng.integers(5, 60))
+    nv = int(rng.integers(3, 12))
     edges = rng.integers(0, nv, size=(ne, 2))
-    kind = draw(st.sampled_from(["path", "cycle", "rand"]))
+    kind = ["path", "cycle", "rand"][int(rng.integers(0, 3))]
     if kind == "path":
-        q = path_query(draw(st.integers(3, 5)))
+        q = path_query(int(rng.integers(3, 6)))
     elif kind == "cycle":
-        q = cycle_query(draw(st.integers(3, 5)))
+        q = cycle_query(int(rng.integers(3, 6)))
     else:
-        q = random_graph_query(draw(st.integers(4, 5)), 0.6, seed=seed)
-    return graph_db(edges), q, seed
+        q = random_graph_query(int(rng.integers(4, 6)), 0.6, seed=seed)
+    return graph_db(edges), q
 
 
-@settings(max_examples=25, deadline=None)
-@given(db_and_query())
-def test_all_engines_match_bruteforce(dq):
-    db, q, seed = dq
+def _assert_engines_match(db, q):
     want = brute_force_count(q, db)
     td, order = choose_plan(q, db.stats())
     assert lftj_count(q, order, db) == want
@@ -38,12 +44,43 @@ def test_all_engines_match_bruteforce(dq):
     assert ytd_count(q, td, db) == want
 
 
-@settings(max_examples=10, deadline=None)
-@given(db_and_query(), st.integers(0, 6))
-def test_bounded_cache_invariant(dq, cap):
-    """Any capacity (even 0) must not change results — caching is optional
-    by construction (the paper's 'flexible' property)."""
-    db, q, seed = dq
+def _assert_bounded_cache_invariant(db, q, cap: int):
     td, order = choose_plan(q, db.stats())
     want = lftj_count(q, order, db)
     assert clftj_count(q, td, order, db, CachePolicy(capacity=cap)) == want
+
+
+# -- deterministic corpus (always runs) ------------------------------------
+
+CORPUS = list(range(17, 17 + 12))
+
+
+@pytest.mark.parametrize("seed", CORPUS)
+def test_corpus_all_engines_match_bruteforce(seed):
+    db, q = _make_case(seed)
+    _assert_engines_match(db, q)
+
+
+@pytest.mark.parametrize("seed,cap", [(s, s % 7) for s in CORPUS[:6]])
+def test_corpus_bounded_cache_invariant(seed, cap):
+    """Any capacity (even 0) must not change results — caching is optional
+    by construction (the paper's 'flexible' property)."""
+    db, q = _make_case(seed)
+    _assert_bounded_cache_invariant(db, q, cap)
+
+
+# -- hypothesis drivers (when installed) -----------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10 ** 6))
+    def test_all_engines_match_bruteforce(seed):
+        db, q = _make_case(seed)
+        _assert_engines_match(db, q)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10 ** 6), st.integers(0, 6))
+    def test_bounded_cache_invariant(seed, cap):
+        db, q = _make_case(seed)
+        _assert_bounded_cache_invariant(db, q, cap)

@@ -1,7 +1,9 @@
-"""Separator enumeration (paper §4.2): exactness, order, no repetition."""
+"""Separator enumeration (paper §4.2): exactness, order, no repetition.
+
+Property coverage runs under hypothesis when installed; a deterministic
+seed corpus keeps the same assertions running on minimal installs."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cq import cycle_query, lollipop_query, path_query, \
     random_graph_query
@@ -9,6 +11,12 @@ from repro.core.gaifman import gaifman_graph
 from repro.core.separators import (brute_force_constrained_separators,
                                    enumerate_constrained_separators,
                                    min_constrained_separator)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
 
 
 QUERIES = [path_query(4), path_query(6), cycle_query(5), cycle_query(6),
@@ -40,9 +48,7 @@ def test_min_oracle_is_exact(qi):
         assert m is not None and len(m) == len(want[0])
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(4, 7), st.integers(0, 10_000))
-def test_property_enumeration_random_graphs(n, seed):
+def _check_random_graph(n: int, seed: int) -> None:
     rng = np.random.default_rng(seed)
     q = random_graph_query(n, float(rng.uniform(0.3, 0.8)), seed=seed)
     g = gaifman_graph(q)
@@ -50,3 +56,16 @@ def test_property_enumeration_random_graphs(n, seed):
     got = list(enumerate_constrained_separators(g, C, max_size=3))
     want = [s for s in brute_force_constrained_separators(g, C, max_size=3)]
     assert set(got) == set(want)
+
+
+@pytest.mark.parametrize("n,seed", [(4 + s % 4, 101 + s) for s in range(10)])
+def test_corpus_enumeration_random_graphs(n, seed):
+    _check_random_graph(n, seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(4, 7), st.integers(0, 10_000))
+    def test_property_enumeration_random_graphs(n, seed):
+        _check_random_graph(n, seed)

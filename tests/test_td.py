@@ -1,12 +1,20 @@
-"""Tree decompositions: validity, orders, enumeration (paper §2.3, §4)."""
+"""Tree decompositions: validity, orders, enumeration (paper §2.3, §4).
+
+Property coverage runs under hypothesis when installed; a deterministic
+seed corpus keeps the same assertions running on minimal installs."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cq import (clique_query, cycle_query, lollipop_query,
                            path_query, random_graph_query)
 from repro.core.decompose import (choose_plan, enumerate_tds,
                                   generic_decompose, td_heuristic_key)
 from repro.core.td import TreeDecomposition, singleton_td
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
 
 QUERIES = [path_query(5), cycle_query(5), cycle_query(6),
            lollipop_query(3, 2), clique_query(4),
@@ -63,10 +71,21 @@ def test_redundant_bag_elimination():
     assert out.num_nodes == 2
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(4, 7), st.integers(0, 10_000))
-def test_property_plans_random_graphs(n, seed):
+def _check_random_plan(n: int, seed: int) -> None:
     q = random_graph_query(n, 0.5, seed=seed)
     td, order = choose_plan(q)
     td.validate(q)
     assert td.is_strongly_compatible(order)
+
+
+@pytest.mark.parametrize("n,seed", [(4 + s % 4, 211 + s) for s in range(10)])
+def test_corpus_plans_random_graphs(n, seed):
+    _check_random_plan(n, seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(4, 7), st.integers(0, 10_000))
+    def test_property_plans_random_graphs(n, seed):
+        _check_random_plan(n, seed)
