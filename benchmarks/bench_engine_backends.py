@@ -3,11 +3,12 @@ engine's cache-tier ablation (dedup / persistent table / both / none).
 This is the measured §Perf series for the join engine."""
 from __future__ import annotations
 
-from repro.core import choose_plan, clftj_count, cycle_query, path_query
+from repro.core import (CacheConfig, choose_plan, clftj_count, cycle_query,
+                        path_query)
 from repro.core.cached_frontier import JaxCachedTrieJoin
 from repro.data.graphs import dataset
 
-from .common import run_jax, run_ref
+from .common import run_jax_cached, run_ref
 
 
 def main() -> None:
@@ -18,20 +19,21 @@ def main() -> None:
             td, order = choose_plan(q, db.stats())
             run_ref(f"engine/{ds}/{qname}/ref-clftj",
                     lambda c: clftj_count(q, td, order, db, None, c))
+            off = CacheConfig(slots=0)
+            on = CacheConfig(slots=1 << 16)
             for label, kw in (
-                    ("none", dict(dedup=False, cache_slots=0)),
-                    ("dedup", dict(dedup=True, cache_slots=0)),
-                    ("table", dict(dedup=False, cache_slots=1 << 16)),
-                    ("both", dict(dedup=True, cache_slots=1 << 16))):
+                    ("none", dict(dedup=False, cache=off)),
+                    ("dedup", dict(dedup=True, cache=off)),
+                    ("table", dict(dedup=False, cache=on)),
+                    ("both", dict(dedup=True, cache=on))):
                 eng = JaxCachedTrieJoin(q, td, order, db,
                                         capacity=1 << 14, **kw)
-                # warm-up compile, then measure
+                # warm-up compile, then measure (tier stats land in the
+                # JSON record via run_jax_cached)
                 eng.count()
-                stats0 = dict(eng.stats)
                 eng2 = JaxCachedTrieJoin(q, td, order, db,
                                          capacity=1 << 14, **kw)
-                r = run_jax(f"engine/{ds}/{qname}/jax-{label}", eng2.count)
-                r["tier1"] = eng2.stats["tier1_rows_collapsed"]
+                run_jax_cached(f"engine/{ds}/{qname}/jax-{label}", eng2)
 
 
 if __name__ == "__main__":

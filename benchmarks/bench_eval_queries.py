@@ -1,13 +1,15 @@
 """Paper Figs 8/9: full query evaluation (materialized results) for
-{3-4}-path and {3-5}-cycle, plus a representative random-graph query."""
+{3-4}-path and {3-5}-cycle, plus a representative random-graph query —
+host references and the JAX CLFTJ evaluate path (schedule-executor EMIT),
+the latter with the plan/compile/exec wall-time split."""
 from __future__ import annotations
 
-from repro.core import (choose_plan, clftj_evaluate, lftj_evaluate,
+from repro.core import (choose_plan, clftj_evaluate, engine, lftj_evaluate,
                         ytd_evaluate, path_query, cycle_query,
                         random_graph_query)
 from repro.data.graphs import dataset
 
-from .common import run_ref
+from .common import run_engine_result, run_ref
 
 
 def main() -> None:
@@ -25,6 +27,11 @@ def main() -> None:
                     lambda c: len(clftj_evaluate(q, td, order, db, None, c)))
             run_ref(f"fig8/{ds}/{qname}/ytd-eval",
                     lambda c: len(ytd_evaluate(q, td, db, c)))
+            run_engine_result(
+                f"fig8/{ds}/{qname}/jax-clftj-eval",
+                lambda: engine.evaluate(q, db, algorithm="clftj",
+                                        backend="jax", td=td, order=order,
+                                        capacity=1 << 14))
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Shared benchmark plumbing: timing, budgets, CSV rows."""
+"""Shared benchmark plumbing: timing, budgets, CSV rows + JSON records."""
 from __future__ import annotations
 
 import time
@@ -10,10 +10,17 @@ from repro.core.db import Counters, JoinBudgetExceeded
 DEFAULT_BUDGET = 25_000_000
 
 ROWS: List[Tuple[str, float, str]] = []
+# structured mirror of every emitted row, consumed by ``run.py --json``
+RECORDS: List[Dict] = []
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
+def emit(name: str, us_per_call: float, derived: str,
+         record: Optional[Dict] = None) -> None:
     ROWS.append((name, us_per_call, derived))
+    rec = {"name": name, "us_per_call": us_per_call, "derived": derived}
+    if record:
+        rec.update(record)
+    RECORDS.append(rec)
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
@@ -27,13 +34,15 @@ def run_ref(name: str, fn: Callable[[Counters], int],
     except JoinBudgetExceeded:
         dt = time.perf_counter() - t0
         emit(name, dt * 1e6,
-             f"TIMEOUT(budget={budget});mem={counters.mem_accesses}")
+             f"TIMEOUT(budget={budget});mem={counters.mem_accesses}",
+             record={"kind": "ref", "timeout": True, "seconds": dt})
         return None
     dt = time.perf_counter() - t0
     snap = counters.snapshot()
     emit(name, dt * 1e6,
          f"count={result};mem={snap['mem_accesses']};"
-         f"hits={snap['cache_hits']};intrmd={snap['intermediate_tuples']}")
+         f"hits={snap['cache_hits']};intrmd={snap['intermediate_tuples']}",
+         record={"kind": "ref", "result": result, "seconds": dt, **snap})
     return {"result": result, "seconds": dt, **snap}
 
 
@@ -41,7 +50,8 @@ def run_jax(name: str, fn: Callable[[], int]) -> Dict:
     t0 = time.perf_counter()
     result = fn()
     dt = time.perf_counter() - t0
-    emit(name, dt * 1e6, f"count={result}")
+    emit(name, dt * 1e6, f"count={result}",
+         record={"kind": "jax", "result": result, "seconds": dt})
     return {"result": result, "seconds": dt}
 
 
@@ -56,5 +66,28 @@ def run_jax_cached(name: str, eng) -> Dict:
          f"count={result};hit_rate={hit_rate:.4f};hits={s['tier2_hits']};"
          f"probes={s['tier2_probes']};evict={s['tier2_evictions']};"
          f"slots={s['tier2_slots']};resizes={s['tier2_resizes']};"
-         f"t1_collapsed={s['tier1_rows_collapsed']}")
+         f"t1_collapsed={s['tier1_rows_collapsed']}",
+         record={"kind": "jax-cached", "result": result, "seconds": dt,
+                 "hit_rate": hit_rate, **s})
     return {"result": result, "seconds": dt, "hit_rate": hit_rate, **s}
+
+
+def run_engine_result(name: str, fn: Callable[[], "object"]) -> Dict:
+    """Run an ``engine.count``/``engine.evaluate`` facade call and emit its
+    plan/compile/exec wall-time split (satellite: jit warm-up is no longer
+    charged to the algorithm) plus any tier-2 counters."""
+    res = fn()
+    s = res.counters
+    hit_rate = (s.get("tier2_hits", 0) / max(1, s.get("tier2_probes", 0))
+                if s else 0.0)
+    emit(name, res.exec_s * 1e6,
+         f"count={res.count};plan_s={res.plan_s:.4f};"
+         f"compile_s={res.compile_s:.4f};exec_s={res.exec_s:.4f};"
+         f"hit_rate={hit_rate:.4f}",
+         record={"kind": "engine", "result": res.count,
+                 "seconds": res.wall_s, "plan_s": res.plan_s,
+                 "compile_s": res.compile_s, "exec_s": res.exec_s,
+                 "hit_rate": hit_rate, "algorithm": res.algorithm,
+                 "backend": res.backend, **(s or {})})
+    return {"result": res.count, "seconds": res.wall_s,
+            "exec_s": res.exec_s, "hit_rate": hit_rate}

@@ -42,6 +42,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .hostsync import device_get
+
 _MIX = np.int64(-7046029254386353131)  # 0x9E3779B97F4A7C15 as signed
 
 POLICIES = ("direct", "setassoc", "costaware")
@@ -186,7 +188,12 @@ def _insert(tkeys, tvals, tused, tstamp, tcost,
 
 @dataclass
 class DeviceCache:
-    """One node's table: functional arrays + host-side stats/controller."""
+    """One node's table: functional arrays + deferred stats/controller.
+
+    Stats are accumulated *on device* (the ``_acc_*`` fields hold lazy
+    scalars) so probing/inserting never forces a host sync on the hot
+    path; ``hits``/``misses``/... properties and :meth:`stats` fetch them
+    once, through the :mod:`hostsync` funnel, when actually read."""
 
     config: CacheConfig
     keys: jnp.ndarray    # (S, W) int64
@@ -195,16 +202,37 @@ class DeviceCache:
     stamp: jnp.ndarray   # (S, W) int32  — LRU clock (ticks)
     cost: jnp.ndarray    # (S, W) int64  — recomputation-cost proxy
     tick: int = 0
-    hits: int = 0
-    misses: int = 0
-    probes: int = 0
-    inserts: int = 0
-    evictions: int = 0
     resizes: int = 0
-    # sliding window consumed by the sizing controller
-    window_hits: int = 0
-    window_probes: int = 0
     window_launches: int = 0
+    # device-side accumulators (int until the first op touches them)
+    _acc_hits: object = 0
+    _acc_misses: object = 0
+    _acc_probes: object = 0
+    _acc_inserts: object = 0
+    _acc_evictions: object = 0
+    # sliding window consumed by the sizing controller
+    _acc_window_hits: object = 0
+    _acc_window_probes: object = 0
+
+    @property
+    def hits(self) -> int:
+        return int(device_get(self._acc_hits, "cache-stat"))
+
+    @property
+    def misses(self) -> int:
+        return int(device_get(self._acc_misses, "cache-stat"))
+
+    @property
+    def probes(self) -> int:
+        return int(device_get(self._acc_probes, "cache-stat"))
+
+    @property
+    def inserts(self) -> int:
+        return int(device_get(self._acc_inserts, "cache-stat"))
+
+    @property
+    def evictions(self) -> int:
+        return int(device_get(self._acc_evictions, "cache-stat"))
 
     @staticmethod
     def create(config: CacheConfig,
@@ -226,7 +254,7 @@ class DeviceCache:
         return int(self.keys.shape[0] * self.keys.shape[1])
 
     def occupancy(self) -> int:
-        return int(jnp.sum(self.used))
+        return int(device_get(jnp.sum(self.used), "cache-occupancy"))
 
     # -- ops -----------------------------------------------------------
     def probe(self, qkeys: jnp.ndarray,
@@ -236,13 +264,14 @@ class DeviceCache:
                                   self.stamp, qkeys, active,
                                   jnp.int32(self.tick))
         self.stamp = stamp
-        n_active = int(jnp.sum(active))
-        n_hit = int(jnp.sum(hit))
-        self.probes += n_active
-        self.hits += n_hit
-        self.misses += n_active - n_hit
-        self.window_probes += n_active
-        self.window_hits += n_hit
+        # device-side accounting: no host sync on the probe path
+        n_active = jnp.sum(active.astype(jnp.int64))
+        n_hit = jnp.sum(hit.astype(jnp.int64))
+        self._acc_probes = self._acc_probes + n_active
+        self._acc_hits = self._acc_hits + n_hit
+        self._acc_misses = self._acc_misses + (n_active - n_hit)
+        self._acc_window_probes = self._acc_window_probes + n_active
+        self._acc_window_hits = self._acc_window_hits + n_hit
         return hit, vals
 
     def insert(self, qkeys: jnp.ndarray, vals: jnp.ndarray,
@@ -257,8 +286,8 @@ class DeviceCache:
                       rounds=min(self.config.ways, 8))
         (self.keys, self.vals, self.used, self.stamp, self.cost,
          n_ins, n_evict) = out
-        self.inserts += int(n_ins)
-        self.evictions += int(n_evict)
+        self._acc_inserts = self._acc_inserts + n_ins
+        self._acc_evictions = self._acc_evictions + n_evict
         self.window_launches += 1
 
     # -- dynamic sizing (the paper's flexible-cache knob) --------------
@@ -273,8 +302,11 @@ class DeviceCache:
         cfg = self.config
         if not cfg.dynamic or self.window_launches < cfg.resize_interval:
             return 0
-        probes, hits = self.window_probes, self.window_hits
-        self.window_hits = self.window_probes = self.window_launches = 0
+        probes, hits = (int(x) for x in device_get(
+            (self._acc_window_probes, self._acc_window_hits),
+            "cache-resize-window"))
+        self._acc_window_hits = self._acc_window_probes = 0
+        self.window_launches = 0
         if probes == 0:
             return 0
         hit_rate = hits / probes
@@ -303,7 +335,7 @@ class DeviceCache:
         fresh = DeviceCache.create(self.config, new_slots)
         self.keys, self.vals, self.used, self.stamp, self.cost = (
             fresh.keys, fresh.vals, fresh.used, fresh.stamp, fresh.cost)
-        if not bool(old_used.any()):
+        if not bool(device_get(old_used.any(), "cache-rehash")):
             return
         # re-insert resident entries in one batched op; rehash collisions
         # drop entries, which only costs future recomputation (optionality)
@@ -315,10 +347,15 @@ class DeviceCache:
         self.keys, self.vals, self.used, self.stamp, self.cost = out[:5]
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "probes": self.probes, "inserts": self.inserts,
-                "evictions": self.evictions, "resizes": self.resizes,
-                "slots": self.n_slots, "occupancy": self.occupancy()}
+        acc = device_get(
+            {"hits": self._acc_hits, "misses": self._acc_misses,
+             "probes": self._acc_probes, "inserts": self._acc_inserts,
+             "evictions": self._acc_evictions,
+             "occupancy": jnp.sum(self.used)}, "cache-stats")
+        out = {k: int(v) for k, v in acc.items()}
+        out["resizes"] = self.resizes
+        out["slots"] = self.n_slots
+        return out
 
 
 class CacheManager:

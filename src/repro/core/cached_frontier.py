@@ -19,15 +19,22 @@ TPU-native realization of the paper's Figure 2 (see DESIGN.md §2):
 
 Both tiers preserve LFTJ's guarantees: they only ever *skip recomputation of
 subtrees whose count is already known*, exactly like the paper's cache[α, μ|α].
+
+Control flow lives in ``core/schedule.py`` (DESIGN.md §2.5): the TD + order
+are lowered once into a linear op schedule and this class only supplies the
+data plane — the :class:`~.schedule.ScheduleExecutor` interprets the ops,
+with both memoization tiers as executor capabilities.  ``evaluate()`` runs
+the same schedule in materialization mode: tier-1 representatives are
+replayed as row blocks through ``orig`` (the paper §3.4's factorized
+intermediates), so the JAX engine now answers full-evaluation workloads.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
@@ -36,95 +43,57 @@ from .cq import CQ
 from .clftj_ref import Plan
 from .db import Database
 from .frontier import Frontier, JaxTrieJoin, MAX_KEY_BITS
+from .schedule import ScheduleExecutor, lower
 from .td import TreeDecomposition
 
+__all__ = ["JaxCachedTrieJoin", "jax_clftj_count", "jax_clftj_evaluate",
+           "MAX_KEY_BITS"]
 
-def _pack_keys(assign: jnp.ndarray, idx: Tuple[int, ...],
-               node: int) -> jnp.ndarray:
-    """Pack <=2 adhesion columns + node id into one int64 key."""
-    key = jnp.full((assign.shape[0],), np.int64(node))
-    for i in idx:
-        key = (key << MAX_KEY_BITS) | assign[:, i].astype(jnp.int64)
-    return key
+_DEPRECATE_SLOTS = ("cache_slots is deprecated and will be removed next "
+                    "release; pass cache=CacheConfig(policy='direct', "
+                    "slots=...) instead")
 
 
-@jax.jit
-def _dedup(keys: jnp.ndarray, active: jnp.ndarray):
-    """Unique active keys: returns (is_rep_sorted→orig layout helpers).
-
-    Returns (first_idx, rep_of_row, n_reps):
-      * ``first_idx[r]``   — row index of representative r (garbage for r >=
-        n_reps),
-      * ``rep_of_row[i]``  — representative id of row i (garbage if inactive),
-      * ``n_reps``         — number of distinct active keys.
-    """
-    C = keys.shape[0]
-    big = jnp.int64(2 ** 62)
-    k = jnp.where(active, keys, big)  # inactive rows sort to the back
-    order = jnp.argsort(k, stable=True)
-    ks = k[order]
-    isfirst = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
-    isfirst = isfirst & (ks != big)
-    rep_sorted = jnp.cumsum(isfirst.astype(jnp.int32)) - 1
-    n_reps = jnp.sum(isfirst.astype(jnp.int32))
-    rep_of_row = jnp.zeros((C,), jnp.int32).at[order].set(rep_sorted)
-    # first occurrence row index per rep (scatter-max; -1 writes are no-ops)
-    first_idx = jnp.zeros((C,), jnp.int32).at[
-        jnp.clip(rep_sorted, 0, C - 1)].max(
-        jnp.where(isfirst, order, -1).astype(jnp.int32))
-    return first_idx, rep_of_row, n_reps
-
-
-@jax.jit
-def _make_rep_frontier(F: Frontier, first_idx: jnp.ndarray,
-                       n_reps: jnp.ndarray) -> Frontier:
-    C = F.assign.shape[0]
-    rep_valid = jnp.arange(C, dtype=jnp.int32) < n_reps
-    src = jnp.clip(first_idx, 0, C - 1)
-    return Frontier(assign=F.assign[src],
-                    factor=jnp.where(rep_valid, 1, 0).astype(jnp.int64),
-                    valid=rep_valid,
-                    orig=jnp.arange(C, dtype=jnp.int32),
-                    lo=F.lo[src], hi=F.hi[src])
-
-
-@jax.jit
-def _apply_counts(F: Frontier, hit, hvals, rep_of_row, cnt) -> Frontier:
-    mult = jnp.where(hit, hvals, cnt[jnp.clip(rep_of_row, 0, cnt.shape[0] - 1)])
-    factor = F.factor * mult
-    return F._replace(factor=factor, valid=F.valid & (factor > 0))
-
-
-@functools.partial(jax.jit, static_argnames=("n_slots",))
-def _segment_counts(exit_F: Frontier, n_slots: int) -> jnp.ndarray:
-    contrib = jnp.where(exit_F.valid, exit_F.factor, 0)
-    return jnp.zeros((n_slots,), jnp.int64).at[
-        jnp.clip(exit_F.orig, 0, n_slots - 1)].add(contrib)
+def _resolve_cache_config(cache: Optional[CacheConfig],
+                          cache_slots: Optional[int],
+                          cached_nodes: Optional[frozenset],
+                          default_slots: int) -> CacheConfig:
+    """One-release shim: a legacy ``cache_slots`` int maps onto a
+    direct-mapped :class:`CacheConfig` with a DeprecationWarning."""
+    if cache_slots is not None:
+        warnings.warn(_DEPRECATE_SLOTS, DeprecationWarning, stacklevel=3)
+        if cache is None:
+            cache = CacheConfig(policy="direct", slots=int(cache_slots),
+                                enabled_nodes=cached_nodes)
+    if cache is None:
+        cache = CacheConfig(policy="direct", slots=default_slots,
+                            enabled_nodes=cached_nodes)
+    elif cached_nodes is not None and cache.enabled_nodes is None:
+        from dataclasses import replace as _replace
+        cache = _replace(cache, enabled_nodes=cached_nodes)
+    return cache
 
 
 class JaxCachedTrieJoin(JaxTrieJoin):
     """CLFTJ over the frontier engine.
 
-    Tier 2 is configured by ``cache`` (a :class:`CacheConfig`); the legacy
-    ``cache_slots`` int is still accepted and maps to a direct-mapped config
-    (``cache_slots=0`` disables tier 2).  ``dedup=False`` disables tier 1
-    (then it degenerates to vanilla LFTJ with per-subtree counting)."""
+    Tier 2 is configured by ``cache`` (a :class:`CacheConfig`;
+    ``slots=0`` disables tier 2).  The legacy ``cache_slots`` int is
+    deprecated — it still maps to a direct-mapped config for one release.
+    ``dedup=False`` disables tier 1 (then it degenerates to vanilla LFTJ
+    with per-subtree counting)."""
 
     def __init__(self, q: CQ, td: TreeDecomposition, order: Sequence[str],
                  db: Database, capacity: int = 1 << 17,
-                 cache_slots: int = 1 << 16, dedup: bool = True,
+                 cache_slots: Optional[int] = None, dedup: bool = True,
                  impl: str = "bsearch",
                  cached_nodes: Optional[frozenset] = None,
                  cache: Optional[CacheConfig] = None):
         super().__init__(q, order, db, capacity=capacity, impl=impl)
         self.plan = Plan.build(td, order)
         self.td = td
-        if cache is None:
-            cache = CacheConfig(policy="direct", slots=int(cache_slots),
-                                enabled_nodes=cached_nodes)
-        elif cached_nodes is not None and cache.enabled_nodes is None:
-            from dataclasses import replace as _replace
-            cache = _replace(cache, enabled_nodes=cached_nodes)
+        cache = _resolve_cache_config(cache, cache_slots, cached_nodes,
+                                      default_slots=1 << 16)
         self.dedup = dedup
         maxval = max((int(r.max()) if r.size else 0) for r in self.atom_rows)
         # keys that don't pack into int64 fields would alias distinct
@@ -136,6 +105,10 @@ class JaxCachedTrieJoin(JaxTrieJoin):
         self.cache.expected_tables = sum(
             1 for v in range(td.num_nodes)
             if td.parent[v] >= 0 and self._node_cacheable(v))
+        # the tentpole: TD + order lowered ONCE into the shared op schedule
+        self.schedule = lower(self.n, plan=self.plan,
+                              cacheable=self._node_cacheable,
+                              dedup=self.dedup)
         self.stats = {"tier1_rows_collapsed": 0, "tier2_hits": 0,
                       "tier2_misses": 0, "tier2_probes": 0,
                       "tier2_inserts": 0, "tier2_evictions": 0,
@@ -153,7 +126,7 @@ class JaxCachedTrieJoin(JaxTrieJoin):
     # -----------------------------------------------------------------
     def _node_cacheable(self, v: int) -> bool:
         """Can node v's adhesion be keyed at all (tier 1 *or* tier 2)?
-        Independent of cache_slots: ``cache_slots=0`` disables only
+        Independent of the slot count: ``slots=0`` disables only
         tier 2, never tier-1 dedup."""
         if not self._keys_packable:
             return False
@@ -162,12 +135,7 @@ class JaxCachedTrieJoin(JaxTrieJoin):
             return False
         return len(self.plan.adhesion_idx[v]) <= 2
 
-    def _owned_depths(self, v: int) -> List[int]:
-        if v not in self.plan.first_d:
-            return []
-        return list(range(self.plan.first_d[v], self.plan.last_d[v] + 1))
-
-    def _finalize_stats(self) -> None:
+    def _finalize(self, ex: ScheduleExecutor) -> None:
         agg = self.cache.stats()
         self.stats["tier2_hits"] = agg["hits"]
         self.stats["tier2_misses"] = agg["misses"]
@@ -176,80 +144,51 @@ class JaxCachedTrieJoin(JaxTrieJoin):
         self.stats["tier2_evictions"] = agg["evictions"]
         self.stats["tier2_resizes"] = agg["resizes"]
         self.stats["tier2_slots"] = agg["slots"]
+        self.stats["tier1_rows_collapsed"] += ex.t1_rows_collapsed()
+        self.stats["subtree_launches"] += ex.subtree_launches
 
     # -----------------------------------------------------------------
     def count(self) -> int:
         with enable_x64():
-            total = 0
-            for exitF in self._run_node(self.td.root,
-                                        [self.initial_frontier()]):
-                total += int(jnp.sum(jnp.where(exitF.valid, exitF.factor, 0)))
-            self._finalize_stats()
+            ex = ScheduleExecutor(self, mode="count")
+            self.last_executor = ex  # op_runs / sync diagnostics
+            total = ex.count()
+            self._finalize(ex)
             return total
 
-    def _run_node(self, v: int, chunks: List[Frontier]) -> List[Frontier]:
-        """Expand node v's own vars, then fold each child subtree into
-        factors; returns chunks at depth subtree_last(v)+1."""
-        for d in self._owned_depths(v):
-            nxt: List[Frontier] = []
-            for F in chunks:
-                for piece in self.expand_chunks(F, d):
-                    if bool(piece.valid.any()):
-                        nxt.append(piece)
-            chunks = nxt
-        for c in self.td.children[v]:
-            chunks = [self._enter_child(c, F) for F in chunks]
-            chunks = [F for F in chunks if bool(F.valid.any())]
-        return chunks
+    def evaluate(self) -> Iterator[np.ndarray]:
+        """Yields (k, n) int32 blocks of result assignments (order cols).
 
-    def _enter_child(self, c: int, F: Frontier) -> Frontier:
-        """Paper Fig 2 lines 6-12 & 20-22, vectorized over the chunk."""
-        self.stats["subtree_launches"] += 1
-        C = self.capacity
-        adh = self.plan.adhesion_idx[c]
-        cacheable = self._node_cacheable(c)
-        use_t2 = cacheable and self.cache.enabled
-        use_t1 = self.dedup and cacheable
-
-        keys = _pack_keys(F.assign, adh, c) if cacheable else None
-        if use_t2:
-            hit, hvals = self.cache.get(c).probe(keys, F.valid)
-        else:
-            hit = jnp.zeros((C,), bool)
-            hvals = jnp.zeros((C,), jnp.int64)
-
-        active = F.valid & ~hit
-        if use_t1:
-            first_idx, rep_of_row, n_reps = _dedup(keys, active)
-            self.stats["tier1_rows_collapsed"] += int(
-                jnp.sum(active.astype(jnp.int32)) - n_reps)
-            R = _make_rep_frontier(F, first_idx, n_reps)
-        else:
-            # identity "dedup": every active row is its own representative
-            rep_of_row = jnp.arange(C, dtype=jnp.int32)
-            R = F._replace(factor=jnp.where(active, 1, 0).astype(jnp.int64),
-                           valid=active,
-                           orig=jnp.arange(C, dtype=jnp.int32))
-
-        cnt = jnp.zeros((C,), jnp.int64)
-        if bool(R.valid.any()):
-            for exitF in self._run_node(c, [R]):
-                cnt = cnt + _segment_counts(exitF, C)
-
-        if use_t2:
-            rep_keys = keys[jnp.clip(first_idx, 0, C - 1)] if use_t1 else keys
-            rep_active = (jnp.arange(C) < n_reps) if use_t1 else active
-            self.cache.get(c).insert(rep_keys, cnt, rep_active)
-            self.cache.maybe_resize(c)
-
-        return _apply_counts(F, hit, hvals, rep_of_row, cnt)
+        Materialization mode of the same schedule: tier-1 representatives
+        are replayed back through ``orig`` at every FOLD; tier-2 count
+        tables cannot replay tuples and are bypassed (optionality — the
+        cache is never required for correctness)."""
+        with enable_x64():
+            ex = ScheduleExecutor(self, mode="evaluate")
+            self.last_executor = ex
+            yield from ex.evaluate()
+            self._finalize(ex)
 
 
 def jax_clftj_count(q: CQ, td: TreeDecomposition, order: Sequence[str],
                     db: Database, capacity: int = 1 << 17,
-                    cache_slots: int = 1 << 16, dedup: bool = True,
+                    cache_slots: Optional[int] = None, dedup: bool = True,
                     impl: str = "bsearch",
                     cache: Optional[CacheConfig] = None) -> int:
     return JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
                              cache_slots=cache_slots, dedup=dedup,
                              impl=impl, cache=cache).count()
+
+
+def jax_clftj_evaluate(q: CQ, td: TreeDecomposition, order: Sequence[str],
+                       db: Database, capacity: int = 1 << 17,
+                       dedup: bool = True, impl: str = "bsearch",
+                       cache: Optional[CacheConfig] = None) -> np.ndarray:
+    """Materialize the full result as an (N, n) int32 array over ``order``
+    columns — the JAX CLFTJ analogue of :func:`~.clftj_ref.clftj_evaluate`."""
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
+                            dedup=dedup, impl=impl, cache=cache)
+    blocks = list(eng.evaluate())
+    if not blocks:
+        return np.zeros((0, len(eng.order)), np.int32)
+    return np.concatenate(blocks, axis=0)

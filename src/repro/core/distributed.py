@@ -1,9 +1,10 @@
 """Distributed CLFTJ: a fully-jittable static pipeline + mesh execution.
 
 The host-driven engine (``cached_frontier``) splits morsels adaptively; for
-SPMD execution we instead fix the chunk capacity, unroll the TD recursion
-(it is static), and flag overflow instead of splitting.  The result is one
-pure function (frontier₀, cache tables) → (count, overflow, tables) that
+SPMD execution we instead fix the chunk capacity, interpret the lowered op
+schedule at trace time (``schedule.execute_static``), and flag overflow
+instead of splitting.  The result is one pure function
+(frontier₀, cache tables) → (count, overflow, tables) that
 ``shard_map``s across the mesh: each shard owns a contiguous slice of the
 top-level variable's candidate runs (the natural LFTJ work partition — see
 DESIGN.md §3), keeps a private cache (caching is an optimization, never a
@@ -12,8 +13,7 @@ is the final count psum.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -21,15 +21,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from .cache import CacheConfig, _insert as _cache_insert, \
-    _probe as _cache_probe
-from .cached_frontier import (JaxCachedTrieJoin, _apply_counts, _dedup,
-                              _make_rep_frontier, _pack_keys, _segment_counts)
+from .cache import CacheConfig
+from .cached_frontier import JaxCachedTrieJoin, _resolve_cache_config
 from .cq import CQ
 from .db import Database
 from .frontier import Frontier
+from .schedule import execute_static
 from .td import TreeDecomposition
 
 
@@ -38,7 +37,9 @@ class StaticCLFTJ(JaxCachedTrieJoin):
 
     Tier-2 tables are (S, W) arrays per the configured :class:`CacheConfig`
     policy; each shard keeps a private table (no coherence traffic) and the
-    LRU tick is a static counter baked in by the unrolled TD recursion."""
+    LRU tick is a static counter baked in by the unrolled op schedule —
+    the *same* lowered schedule the host executor interprets, run through
+    ``schedule.execute_static`` instead of a third recursion copy."""
 
     # -----------------------------------------------------------------
     def count_fn(self):
@@ -54,69 +55,17 @@ class StaticCLFTJ(JaxCachedTrieJoin):
                           jnp.zeros((n_sets, cfg.ways), jnp.int64))
                       for c in range(self.td.num_nodes)
                       if cfg.initial_slots() > 0 and self._node_cacheable(c)}
-            self._tick = 0
-            exits, ov, tables = self._static_node(self.td.root, F0,
-                                                  jnp.zeros((), bool), tables)
-            total = jnp.sum(jnp.where(exits.valid, exits.factor, 0))
+            total, ov, _ = execute_static(self.schedule, self, F0, tables,
+                                          cfg)
             return total, ov
 
         return fn
-
-    def _static_node(self, v: int, F: Frontier, ov, tables):
-        for d in self._owned_depths(v):
-            F, needed = self._expand_fn(d)(F)
-            ov = ov | (needed > self.capacity)
-        for c in self.td.children[v]:
-            F, ov, tables = self._static_child(c, F, ov, tables)
-        return F, ov, tables
-
-    def _static_child(self, c: int, F: Frontier, ov, tables):
-        C = self.capacity
-        adh = self.plan.adhesion_idx[c]
-        cacheable = self._node_cacheable(c)
-        use_t2 = cacheable and c in tables
-        use_t1 = self.dedup and cacheable
-
-        keys = _pack_keys(F.assign, adh, c) if cacheable else None
-        if use_t2:
-            tk, tv, tu, ts, tc = tables[c]
-            self._tick += 1
-            hit, hvals, ts = _cache_probe(tk, tv, tu, ts, keys, F.valid,
-                                          jnp.int32(self._tick))
-            tables = dict(tables)
-            tables[c] = (tk, tv, tu, ts, tc)
-        else:
-            hit = jnp.zeros((C,), bool)
-            hvals = jnp.zeros((C,), jnp.int64)
-        active = F.valid & ~hit
-        if use_t1:
-            first_idx, rep_of_row, n_reps = _dedup(keys, active)
-            R = _make_rep_frontier(F, first_idx, n_reps)
-        else:
-            rep_of_row = jnp.arange(C, dtype=jnp.int32)
-            R = F._replace(factor=jnp.where(active, 1, 0).astype(jnp.int64),
-                           valid=active,
-                           orig=jnp.arange(C, dtype=jnp.int32))
-        exits, ov, tables = self._static_node(c, R, ov, tables)
-        cnt = _segment_counts(exits, C)
-        if use_t2:
-            rep_keys = keys[jnp.clip(first_idx, 0, C - 1)] if use_t1 else keys
-            rep_active = (jnp.arange(C) < n_reps) if use_t1 else active
-            self._tick += 1
-            out = _cache_insert(*tables[c], rep_keys, cnt,
-                                jnp.maximum(cnt, 1), rep_active,
-                                jnp.int32(self._tick),
-                                policy=self.cache_config.policy,
-                                rounds=min(self.cache_config.ways, 8))
-            tables = dict(tables)
-            tables[c] = out[:5]
-        return _apply_counts(F, hit, hvals, rep_of_row, cnt), ov, tables
 
 
 def make_distributed_count(q: CQ, td: TreeDecomposition,
                            order: Sequence[str], db: Database, mesh: Mesh,
                            capacity: int = 1 << 14,
-                           cache_slots: int = 1 << 15,
+                           cache_slots: Optional[int] = None,
                            axes: Tuple[str, ...] = ("data",),
                            cache: Optional[CacheConfig] = None):
     """Build (jitted_fn, engine).  ``jitted_fn()`` -> (count, overflow).
@@ -125,8 +74,9 @@ def make_distributed_count(q: CQ, td: TreeDecomposition,
     [i·R/D, (i+1)·R/D); relations are replicated (closure constants); the
     final count is a psum over the mesh axes — the single collective.
     """
-    eng = StaticCLFTJ(q, td, order, db, capacity=capacity,
-                      cache_slots=cache_slots, cache=cache)
+    cache = _resolve_cache_config(cache, cache_slots, None,
+                                  default_slots=1 << 15)
+    eng = StaticCLFTJ(q, td, order, db, capacity=capacity, cache=cache)
     g_ai, g_lvl = eng.at_depth[0][eng.guard[0]]
     rs = eng.levels[g_ai][g_lvl].runstarts
     nruns = rs.shape[0]

@@ -4,9 +4,18 @@
     res = engine.count(q, db)                     # plans a TD, runs JAX CLFTJ
     res = engine.count(q, db, algorithm="lftj")   # vanilla trie join
     res = engine.count(q, db, backend="ref")      # paper-faithful host engines
+    res = engine.evaluate(q, db, backend="jax")   # materialized tuples on JAX
+
+Timing discipline: ``Result`` separates ``plan_s`` (TD/order planning),
+``compile_s`` (jit trace+lower+XLA compile, measured via jax.monitoring
+events), and ``exec_s`` (the remainder) — so benchmark numbers stop
+charging jit warm-up to the algorithm.  ``wall_s`` stays the end-to-end
+total for backwards compatibility.
 """
 from __future__ import annotations
 
+import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -33,7 +42,56 @@ class Result:
     order: Tuple[str, ...]
     td: Optional[TreeDecomposition]
     counters: Dict[str, int] = field(default_factory=dict)
-    wall_s: float = 0.0
+    wall_s: float = 0.0     # end-to-end (= plan_s + compile_s + exec_s)
+    plan_s: float = 0.0     # TD enumeration + order selection
+    compile_s: float = 0.0  # jit trace / lowering / XLA backend compile
+    exec_s: float = 0.0     # actual engine execution
+
+
+# -- compile-time accounting (jax.monitoring duration events) --------------
+
+_compile_lock = threading.Lock()
+_compile_accs: List[List[float]] = []
+_listener_installed = False
+
+
+def _install_listener() -> None:
+    global _listener_installed
+    if _listener_installed:
+        return
+    try:
+        import jax.monitoring
+
+        def _on_duration(name: str, secs: float, **_kw) -> None:
+            if name.startswith("/jax/core/compile"):
+                with _compile_lock:
+                    for acc in _compile_accs:
+                        acc[0] += secs
+
+        jax.monitoring.register_event_duration_secs_listener(_on_duration)
+        _listener_installed = True
+    except Exception:  # pragma: no cover - monitoring API unavailable
+        _listener_installed = True  # don't retry every call
+
+
+class _CompileClock:
+    """Accumulates jax compile/trace/lower seconds while the scope is open."""
+
+    def __init__(self) -> None:
+        self.total = 0.0
+        self._acc = [0.0]
+
+    def __enter__(self) -> "_CompileClock":
+        _install_listener()
+        with _compile_lock:
+            _compile_accs.append(self._acc)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        with _compile_lock:
+            _compile_accs.remove(self._acc)
+        self.total = self._acc[0]
+        return False
 
 
 def plan_query(q: CQ, db: Optional[Database] = None,
@@ -43,54 +101,67 @@ def plan_query(q: CQ, db: Optional[Database] = None,
     return choose_plan(q, stats, max_adhesion=max_adhesion)
 
 
+def _plan(q: CQ, db: Database, td, order):
+    if td is None or order is None:
+        td_, order_ = plan_query(q, db)
+        td = td if td is not None else td_
+        order = order if order is not None else order_
+    return td, tuple(order)
+
+
 def count(q: CQ, db: Database, algorithm: str = "clftj",
           backend: str = "jax",
           td: Optional[TreeDecomposition] = None,
           order: Optional[Sequence[str]] = None,
           policy: Optional[CachePolicy] = None,
-          capacity: int = 1 << 16, cache_slots: int = 1 << 16,
+          capacity: int = 1 << 16, cache_slots: Optional[int] = None,
           dedup: bool = True, impl: str = "bsearch",
           cache: Optional[CacheConfig] = None) -> Result:
     """Count ``q`` over ``db``.  ``cache`` configures the tier-2 cache of the
     JAX engine (policy / associativity / slots / dynamic budget); for the
     ``ref`` backend it is mapped onto the paper's :class:`CachePolicy`
-    unless an explicit ``policy`` is given."""
-    import time
+    unless an explicit ``policy`` is given.  ``cache_slots`` is deprecated
+    (one-release shim onto a direct-mapped ``CacheConfig``)."""
     t0 = time.perf_counter()
     counters = Counters()
-    if td is None or order is None:
-        td_, order_ = plan_query(q, db)
-        td = td if td is not None else td_
-        order = order if order is not None else order_
-    order = tuple(order)
-    if algorithm == "clftj":
-        if backend == "jax":
-            eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
-                                    cache_slots=cache_slots, dedup=dedup,
-                                    impl=impl, cache=cache)
-            c = eng.count()
-            counters_out = dict(eng.stats)
-        else:
-            if policy is None and cache is not None:
-                policy = CachePolicy.from_cache_config(cache)
-            c = CLFTJ(q, td, order, db, policy, counters).count()
+    if cache_slots is not None:
+        # resolve the deprecated parameter up front so BOTH backends warn
+        # and honor it during the migration window
+        from .cached_frontier import _resolve_cache_config
+        cache = _resolve_cache_config(cache, cache_slots, None,
+                                      default_slots=1 << 16)
+    td, order = _plan(q, db, td, order)
+    t1 = time.perf_counter()
+    with _CompileClock() as cc:
+        if algorithm == "clftj":
+            if backend == "jax":
+                eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
+                                        dedup=dedup, impl=impl, cache=cache)
+                c = eng.count()
+                counters_out = dict(eng.stats)
+            else:
+                if policy is None and cache is not None:
+                    policy = CachePolicy.from_cache_config(cache)
+                c = CLFTJ(q, td, order, db, policy, counters).count()
+                counters_out = counters.snapshot()
+        elif algorithm == "lftj":
+            if backend == "jax":
+                c = JaxTrieJoin(q, order, db, capacity=capacity,
+                                impl=impl).count()
+                counters_out = {}
+            else:
+                c = LFTJ(q, order, db, counters).count()
+                counters_out = counters.snapshot()
+        elif algorithm == "ytd":
+            c = YTD(q, td, db, counters).count()
             counters_out = counters.snapshot()
-    elif algorithm == "lftj":
-        if backend == "jax":
-            c = JaxTrieJoin(q, order, db, capacity=capacity,
-                            impl=impl).count()
-            counters_out = {}
         else:
-            c = LFTJ(q, order, db, counters).count()
-            counters_out = counters.snapshot()
-    elif algorithm == "ytd":
-        c = YTD(q, td, db, counters).count()
-        counters_out = counters.snapshot()
-    else:
-        raise ValueError(algorithm)
+            raise ValueError(algorithm)
+    t2 = time.perf_counter()
     return Result(count=c, tuples=None, algorithm=algorithm, backend=backend,
                   order=order, td=td, counters=counters_out,
-                  wall_s=time.perf_counter() - t0)
+                  wall_s=t2 - t0, plan_s=t1 - t0, compile_s=cc.total,
+                  exec_s=max(0.0, (t2 - t1) - cc.total))
 
 
 def evaluate(q: CQ, db: Database, algorithm: str = "clftj",
@@ -98,33 +169,52 @@ def evaluate(q: CQ, db: Database, algorithm: str = "clftj",
              td: Optional[TreeDecomposition] = None,
              order: Optional[Sequence[str]] = None,
              policy: Optional[CachePolicy] = None,
-             capacity: int = 1 << 16, impl: str = "bsearch") -> Result:
-    import time
+             capacity: int = 1 << 16, impl: str = "bsearch",
+             dedup: bool = True,
+             cache: Optional[CacheConfig] = None) -> Result:
+    """Materialize ``q``'s full result.  ``backend="jax"`` runs the
+    schedule executor in evaluation mode (tier-1 representatives replayed
+    as row blocks); tuples are identical to the host oracle's."""
     t0 = time.perf_counter()
     counters = Counters()
-    if td is None or order is None:
-        td_, order_ = plan_query(q, db)
-        td = td if td is not None else td_
-        order = order if order is not None else order_
-    order = tuple(order)
-    if algorithm == "clftj":
-        rows = np.asarray(
-            list(CLFTJ(q, td, order, db, policy, counters).evaluate()),
-            dtype=np.int64).reshape(-1, len(order))
-    elif algorithm == "lftj":
-        if backend == "jax":
-            from .frontier import jax_lftj_evaluate
-            rows = jax_lftj_evaluate(q, order, db, capacity=capacity,
-                                     impl=impl)
+    td, order = _plan(q, db, td, order)
+    t1 = time.perf_counter()
+    counters_out: Dict[str, int] = {}
+    with _CompileClock() as cc:
+        if algorithm == "clftj":
+            if backend == "jax":
+                eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
+                                        dedup=dedup, impl=impl, cache=cache)
+                blocks = list(eng.evaluate())
+                rows = (np.concatenate(blocks, axis=0) if blocks
+                        else np.zeros((0, len(order)), np.int32))
+                counters_out = dict(eng.stats)
+            else:
+                rows = np.asarray(
+                    list(CLFTJ(q, td, order, db, policy, counters)
+                         .evaluate()),
+                    dtype=np.int64).reshape(-1, len(order))
+                counters_out = counters.snapshot()
+        elif algorithm == "lftj":
+            if backend == "jax":
+                from .frontier import jax_lftj_evaluate
+                rows = jax_lftj_evaluate(q, order, db, capacity=capacity,
+                                         impl=impl)
+            else:
+                rows = np.asarray(
+                    list(LFTJ(q, order, db, counters).evaluate()),
+                    dtype=np.int64).reshape(-1, len(order))
+                counters_out = counters.snapshot()
+        elif algorithm == "ytd":
+            ytd_rows = YTD(q, td, db, counters).evaluate()
+            rows = np.asarray(ytd_rows, dtype=np.int64).reshape(
+                -1, len(q.variables))
+            counters_out = counters.snapshot()
         else:
-            rows = np.asarray(list(LFTJ(q, order, db, counters).evaluate()),
-                              dtype=np.int64).reshape(-1, len(order))
-    elif algorithm == "ytd":
-        ytd_rows = YTD(q, td, db, counters).evaluate()
-        rows = np.asarray(ytd_rows, dtype=np.int64).reshape(-1, len(q.variables))
-    else:
-        raise ValueError(algorithm)
+            raise ValueError(algorithm)
+    t2 = time.perf_counter()
     return Result(count=rows.shape[0], tuples=rows, algorithm=algorithm,
                   backend=backend, order=order, td=td,
-                  counters=counters.snapshot(),
-                  wall_s=time.perf_counter() - t0)
+                  counters=counters_out,
+                  wall_s=t2 - t0, plan_s=t1 - t0, compile_s=cc.total,
+                  exec_s=max(0.0, (t2 - t1) - cc.total))

@@ -8,8 +8,18 @@ variable ``x_d`` enumerates, for every row, the distinct candidate values of a
 verifies membership in every other participating atom with batched bounded
 binary search (``kernels/leapfrog``).  The frontier after level d contains
 exactly the depth-d partial assignments LFTJ would visit, so worst-case
-optimality is inherited; the static chunk capacity bounds memory the way
-LFTJ's O(1)-per-path state does.
+optimality is inherited.  The static chunk capacity bounds *device* memory
+per launch (each morsel is one fixed-shape chunk); the executor holds a
+level's morsels on the host side of the schedule pass, so host/heap use
+scales with the widest frontier level — and evaluation mode buffers
+emitted ``(assign, valid)`` blocks until the pass completes (streaming
+them is the ROADMAP's "async emit" follow-on).
+
+Execution goes through the shared instruction schedule (DESIGN.md §2.5):
+this class owns the *data plane* (tries, guard selection, the jitted
+expansion step, morsel splitting); control flow — which op runs when, chunk
+admission, count/evaluate emission — is ``core/schedule.py``'s
+:class:`~.schedule.ScheduleExecutor` interpreting the lowered op list.
 
 Counting uses 64-bit factors; engine entry points run under an
 ``enable_x64`` scope (the LM substrate stays 32-bit — the scope is local).
@@ -18,7 +28,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, NamedTuple, Sequence, Tuple
 
 import numpy as np
 
@@ -29,8 +39,10 @@ from jax.experimental import enable_x64
 from ..kernels.leapfrog import ops as lf_ops
 from .cq import CQ
 from .db import Database
+from .schedule import MAX_KEY_BITS, ScheduleExecutor, lower
 
-MAX_KEY_BITS = 21  # packed adhesion keys: values must fit in 21 bits
+__all__ = ["MAX_KEY_BITS", "Frontier", "AtomLevel", "JaxTrieJoin",
+           "jax_lftj_count", "jax_lftj_evaluate"]
 
 
 class Frontier(NamedTuple):
@@ -122,6 +134,9 @@ class JaxTrieJoin:
             scores = [lvl * (1 << 40) - self.sizes[ai] for ai, lvl in parts]
             self.guard.append(int(np.argmax(scores)))
         self._expand_jits: Dict[int, object] = {}
+        # vanilla LFTJ lowers to the trivial schedule: EXPAND over every
+        # depth, then EMIT (subclasses re-lower with their TD plan)
+        self.schedule = lower(self.n)
 
     # ------------------------------------------------------------------
     def initial_frontier(self) -> Frontier:
@@ -160,32 +175,26 @@ class JaxTrieJoin:
         return fn
 
     # ------------------------------------------------------------------
-    def _counts_for(self, F: Frontier, d: int) -> np.ndarray:
-        """Host-side distinct-candidate counts (for morsel splitting)."""
+    def expand_plan(self, d: int) -> Tuple[int, np.ndarray, int]:
+        """Host-side planning arrays for depth d's guard: the executor
+        fetches (lo, hi, valid) once per op and derives candidate counts
+        for morsel admission/splitting from these."""
         parts = self.at_depth[d]
         g_ai, g_lvl = parts[self.guard[d]]
-        rs = self.levels[g_ai][g_lvl].runstarts_np
-        lo = np.asarray(F.lo[:, g_ai])
-        hi = np.asarray(F.hi[:, g_ai])
-        valid = np.asarray(F.valid)
-        r0 = np.searchsorted(rs, lo, side="left")
-        r1 = np.searchsorted(rs, hi, side="left")
-        return np.where(valid, r1 - r0, 0).astype(np.int64)
+        return g_ai, self.levels[g_ai][g_lvl].runstarts_np, self.sizes[g_ai]
 
-    def _split_chunk(self, F: Frontier, d: int,
-                     counts: np.ndarray) -> List[Frontier]:
+    def split_chunk_host(self, host: Dict[str, np.ndarray], d: int,
+                         counts: np.ndarray) -> List[Frontier]:
         """Split a chunk whose expansion would overflow capacity.
 
-        Rows are greedily packed into pieces whose total candidate count fits;
-        a single oversized row is split by guard *run ranges* (host side), so
-        each piece enumerates a disjoint slice of its candidate values.
+        ``host`` is the chunk already fetched to host (one batched sync by
+        the executor).  Rows are greedily packed into pieces whose total
+        candidate count fits; a single oversized row is split by guard
+        *run ranges*, so each piece enumerates a disjoint slice of its
+        candidate values.
         """
         C = self.capacity
-        parts = self.at_depth[d]
-        g_ai, g_lvl = parts[self.guard[d]]
-        rs = self.levels[g_ai][g_lvl].runstarts_np
-        n_rows_g = self.sizes[g_ai]
-        host = {k: np.asarray(v) for k, v in F._asdict().items()}
+        g_ai, rs, n_rows_g = self.expand_plan(d)
         rows: List[Dict[str, np.ndarray]] = []
         for i in np.flatnonzero(host["valid"]):
             c = int(counts[i])
@@ -240,47 +249,18 @@ class JaxTrieJoin:
         return Frontier(**out)
 
     # ------------------------------------------------------------------
-    def expand_chunks(self, F: Frontier, d: int) -> List[Frontier]:
-        """Expand chunk F at depth d into >= 1 compacted chunks at d+1."""
-        counts = self._counts_for(F, d)
-        needed = int(counts.sum())
-        fn = self._expand_fn(d)
-        if needed <= self.capacity:
-            out, _ = fn(F)
-            return [out]
-        pieces = self._split_chunk(F, d, counts)
-        return [fn(p)[0] for p in pieces]
-
-    # ------------------------------------------------------------------
     def count(self) -> int:
         with enable_x64():
-            total = 0
-            stack: List[Tuple[int, Frontier]] = [(0, self.initial_frontier())]
-            while stack:
-                d, F = stack.pop()
-                if d == self.n:
-                    total += int(jnp.sum(
-                        jnp.where(F.valid, F.factor, 0)))
-                    continue
-                for piece in self.expand_chunks(F, d):
-                    if bool(piece.valid.any()):
-                        stack.append((d + 1, piece))
-            return total
+            ex = ScheduleExecutor(self, mode="count")
+            self.last_executor = ex  # op_runs / sync diagnostics
+            return ex.count()
 
     def evaluate(self) -> Iterator[np.ndarray]:
         """Yields (k, n) blocks of result assignments (order columns)."""
         with enable_x64():
-            stack: List[Tuple[int, Frontier]] = [(0, self.initial_frontier())]
-            while stack:
-                d, F = stack.pop()
-                if d == self.n:
-                    mask = np.asarray(F.valid)
-                    if mask.any():
-                        yield np.asarray(F.assign)[mask]
-                    continue
-                for piece in self.expand_chunks(F, d):
-                    if bool(piece.valid.any()):
-                        stack.append((d + 1, piece))
+            ex = ScheduleExecutor(self, mode="evaluate")
+            self.last_executor = ex
+            yield from ex.evaluate()
 
 
 @jax.jit

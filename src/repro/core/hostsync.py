@@ -1,0 +1,45 @@
+"""Deliberate device→host synchronization funnel.
+
+Every host sync on the join-engine hot path goes through :func:`device_get`
+so the cost that used to be invisible (``bool(F.valid.any())`` per chunk,
+``int(...)`` per stat) is a *counted event*: tests put a :class:`SyncCounter`
+around a query and assert the executor stays under a fixed budget
+(``tests/test_sync_budget.py``).  The schedule executor batches its
+admission checks so the count is O(ops), not O(chunks).
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+
+_active: List["SyncCounter"] = []
+
+
+class SyncCounter:
+    """Context manager counting device→host syncs made through this funnel.
+
+    ``count`` is the number of :func:`device_get` calls (each call may fetch
+    a whole pytree — that is the point: one batched fetch per op, not one
+    per chunk).  ``events`` records the labels, for diagnosing regressions.
+    """
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.events: List[str] = []
+
+    def __enter__(self) -> "SyncCounter":
+        _active.append(self)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        _active.remove(self)
+        return False
+
+
+def device_get(tree: Any, label: str = "") -> Any:
+    """``jax.device_get`` with sync accounting (one event per call)."""
+    for c in _active:
+        c.count += 1
+        c.events.append(label)
+    return jax.device_get(tree)

@@ -1,0 +1,647 @@
+"""Execution IR for the vectorized trie join: one schedule, many engines.
+
+The CLFTJ control flow (paper Fig 2) used to be re-derived three times —
+host recursion in ``frontier.py``, the cache-aware copy in
+``cached_frontier.py``, and the statically-unrolled variant in
+``distributed.py``.  Following Free Join's plan/execution split and
+Veldhuizen's view of LFTJ as a composition of per-variable iterator ops,
+this module lowers ``(CQ, TreeDecomposition, order)`` into a *linear
+instruction schedule* over four ops:
+
+  * ``EXPAND(d)``        — frontier expansion of order variable ``x_d``
+  * ``ENTER_CHILD(c)``   — TD-node entry: tier-2 probe + tier-1 dedup,
+                           parent chunk parked on an explicit frame stack
+  * ``FOLD_CHILD(c)``    — TD-node exit: segment counts, tier-2 insert,
+                           factor multiplication (count mode) or replay of
+                           representative row blocks through ``orig``
+                           (evaluate mode — the paper §3.4's factorized
+                           intermediates, materialized)
+  * ``EMIT``             — accumulate counts / yield result tuples
+
+The TD recursion is flattened at lowering time: a subtree's ops are *data*
+(a bracketed ``ENTER … FOLD`` span in the op list), not Python call frames.
+Executors:
+
+  * :class:`ScheduleExecutor` — the host-driven engine: morsel splitting,
+    pluggable tier-2 cache (``core/cache.py``), batched chunk admission so
+    ``valid.any()`` host syncs happen at most once per op execution (not
+    per chunk — every sync is routed through :mod:`hostsync` and
+    budget-tested), while parent morsels still run an ENTER…FOLD span
+    sequentially so later morsels hit earlier morsels' tier-2 inserts.
+  * :func:`execute_static` — a trace-time interpreter of the same schedule:
+    fixed capacity, overflow flag instead of splitting, functional cache
+    tables — one pure function for ``shard_map`` (``distributed.py``).
+
+Cache, dedup, and sharding are therefore *executor capabilities* driven by
+op flags, not engine-subclass overrides.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .hostsync import device_get
+
+MAX_KEY_BITS = 21  # packed adhesion keys: values must fit in 21 bits
+
+# ---------------------------------------------------------------------------
+# The IR
+# ---------------------------------------------------------------------------
+
+EXPAND = "expand"
+ENTER_CHILD = "enter_child"
+FOLD_CHILD = "fold_child"
+EMIT = "emit"
+
+
+@dataclass(frozen=True)
+class Op:
+    """One schedule instruction (see module docstring for semantics).
+
+    ``probe``/``dedup`` are *eligibility* flags resolved at lowering time
+    (key packs into int64, adhesion dim <= 2, node enabled, engine dedup
+    setting); the executor still ANDs ``probe`` with its runtime cache
+    state (manager enabled, table materialized, count-vs-evaluate mode).
+    """
+
+    kind: str
+    d: int = -1                      # EXPAND: depth (order position)
+    node: int = -1                   # ENTER/FOLD: TD node id
+    adhesion: Tuple[int, ...] = ()   # ENTER/FOLD: order positions of α
+    probe: bool = False              # ENTER: tier-2 eligible (FOLD: insert)
+    dedup: bool = False              # ENTER: tier-1 eligible
+    sub_first: int = -1              # FOLD: first depth owned inside t|c
+    sub_last: int = -1               # FOLD: last depth owned inside t|c
+
+    def __str__(self) -> str:
+        if self.kind == EXPAND:
+            return f"EXPAND(d={self.d})"
+        if self.kind == ENTER_CHILD:
+            return (f"ENTER_CHILD(c={self.node}, α={self.adhesion}, "
+                    f"probe={self.probe}, dedup={self.dedup})")
+        if self.kind == FOLD_CHILD:
+            return (f"FOLD_CHILD(c={self.node}, "
+                    f"sub=[{self.sub_first},{self.sub_last}])")
+        return "EMIT"
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """A lowered, validated linear op list for one (query, TD, order)."""
+
+    ops: Tuple[Op, ...]
+    n: int  # number of order variables
+
+    def __post_init__(self):
+        depths = [op.d for op in self.ops if op.kind == EXPAND]
+        if depths != list(range(self.n)):
+            raise ValueError(f"EXPAND depths {depths} != 0..{self.n - 1}")
+        if not self.ops or self.ops[-1].kind != EMIT:
+            raise ValueError("schedule must end with EMIT")
+        stack: List[int] = []
+        for op in self.ops:
+            if op.kind == ENTER_CHILD:
+                stack.append(op.node)
+            elif op.kind == FOLD_CHILD:
+                if not stack or stack[-1] != op.node:
+                    raise ValueError(
+                        f"FOLD_CHILD({op.node}) does not match open "
+                        f"ENTER stack {stack}")
+                stack.pop()
+        if stack:
+            raise ValueError(f"unclosed ENTER_CHILD nodes {stack}")
+
+    def describe(self) -> str:
+        return "\n".join(str(op) for op in self.ops)
+
+
+def lower(n: int, plan: Optional[Any] = None,
+          cacheable: Optional[Callable[[int], bool]] = None,
+          dedup: bool = True) -> Schedule:
+    """Compile ``(order length, Plan)`` into a linear schedule.
+
+    ``plan`` is a :class:`~.clftj_ref.Plan` (TD/order correspondence);
+    ``plan=None`` lowers the vanilla LFTJ (no TD): EXPAND over every depth
+    then EMIT.  ``cacheable(c)`` resolves per-node key eligibility
+    (packability, adhesion dimension, enabled_nodes); ``dedup`` is the
+    engine's tier-1 switch — both are baked into op flags so every
+    executor runs the same gating.
+    """
+    ops: List[Op] = []
+    if plan is None:
+        ops.extend(Op(EXPAND, d=d) for d in range(n))
+    else:
+        can = cacheable if cacheable is not None else (lambda c: False)
+
+        def emit_node(v: int) -> None:
+            if v in plan.first_d:
+                ops.extend(Op(EXPAND, d=d) for d in
+                           range(plan.first_d[v], plan.last_d[v] + 1))
+            for c in plan.td.children[v]:
+                keyable = bool(can(c))
+                adh = tuple(plan.adhesion_idx[c])
+                ops.append(Op(ENTER_CHILD, node=c, adhesion=adh,
+                              probe=keyable, dedup=keyable and dedup))
+                emit_node(c)
+                ops.append(Op(FOLD_CHILD, node=c, adhesion=adh,
+                              probe=keyable, dedup=keyable and dedup,
+                              sub_first=plan.first_d[c],
+                              sub_last=plan.subtree_last[c]))
+
+        emit_node(plan.td.root)
+    ops.append(Op(EMIT))
+    return Schedule(tuple(ops), n)
+
+
+# ---------------------------------------------------------------------------
+# Shared jitted chunk ops (used by every executor; chunk type is any
+# Frontier-shaped NamedTuple — assign/factor/valid/orig/lo/hi)
+# ---------------------------------------------------------------------------
+
+
+def _pack_keys(assign: jnp.ndarray, idx: Tuple[int, ...],
+               node: int) -> jnp.ndarray:
+    """Pack <=2 adhesion columns + node id into one int64 key."""
+    key = jnp.full((assign.shape[0],), np.int64(node))
+    for i in idx:
+        key = (key << MAX_KEY_BITS) | assign[:, i].astype(jnp.int64)
+    return key
+
+
+@jax.jit
+def _dedup(keys: jnp.ndarray, active: jnp.ndarray):
+    """Unique active keys: returns (first_idx, rep_of_row, n_reps).
+
+    * ``first_idx[r]``   — row index of representative r (garbage for r >=
+      n_reps),
+    * ``rep_of_row[i]``  — representative id of row i (garbage if inactive),
+    * ``n_reps``         — number of distinct active keys.
+    """
+    C = keys.shape[0]
+    big = jnp.int64(2 ** 62)
+    k = jnp.where(active, keys, big)  # inactive rows sort to the back
+    order = jnp.argsort(k, stable=True)
+    ks = k[order]
+    isfirst = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    isfirst = isfirst & (ks != big)
+    rep_sorted = jnp.cumsum(isfirst.astype(jnp.int32)) - 1
+    n_reps = jnp.sum(isfirst.astype(jnp.int32))
+    rep_of_row = jnp.zeros((C,), jnp.int32).at[order].set(rep_sorted)
+    # first occurrence row index per rep (scatter-max; -1 writes are no-ops)
+    first_idx = jnp.zeros((C,), jnp.int32).at[
+        jnp.clip(rep_sorted, 0, C - 1)].max(
+        jnp.where(isfirst, order, -1).astype(jnp.int32))
+    return first_idx, rep_of_row, n_reps
+
+
+@jax.jit
+def _make_rep_frontier(F, first_idx: jnp.ndarray, n_reps: jnp.ndarray):
+    C = F.assign.shape[0]
+    rep_valid = jnp.arange(C, dtype=jnp.int32) < n_reps
+    src = jnp.clip(first_idx, 0, C - 1)
+    return F._replace(assign=F.assign[src],
+                      factor=jnp.where(rep_valid, 1, 0).astype(jnp.int64),
+                      valid=rep_valid,
+                      orig=jnp.arange(C, dtype=jnp.int32),
+                      lo=F.lo[src], hi=F.hi[src])
+
+
+@jax.jit
+def _identity_reps(F, active: jnp.ndarray):
+    """Degenerate dedup: every active row is its own representative."""
+    C = F.assign.shape[0]
+    return F._replace(factor=jnp.where(active, 1, 0).astype(jnp.int64),
+                      valid=active,
+                      orig=jnp.arange(C, dtype=jnp.int32))
+
+
+@jax.jit
+def _apply_counts(F, hit, hvals, rep_of_row, cnt):
+    mult = jnp.where(hit, hvals, cnt[jnp.clip(rep_of_row, 0, cnt.shape[0] - 1)])
+    factor = F.factor * mult
+    return F._replace(factor=factor, valid=F.valid & (factor > 0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots",))
+def _segment_counts(exit_F, n_slots: int) -> jnp.ndarray:
+    contrib = jnp.where(exit_F.valid, exit_F.factor, 0)
+    return jnp.zeros((n_slots,), jnp.int64).at[
+        jnp.clip(exit_F.orig, 0, n_slots - 1)].add(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("d0", "d1"))
+def _replay_step(P, active, rep_of_row, E, *, d0: int, d1: int):
+    """Scatter one subtree exit chunk back through ``orig`` (evaluate mode).
+
+    For every active parent row *i* (representative ``rep_of_row[i]``) and
+    every valid exit row *e* with ``E.orig == rep_of_row[i]``, produce one
+    output row: the parent's assignment with the subtree columns
+    ``[d0, d1]`` replaced by the exit row's — the factorized intermediate
+    of paper §3.4, re-expanded.  Caller guarantees the total pair count
+    fits the chunk capacity (``active`` is a pre-packed morsel mask).
+    """
+    C = P.assign.shape[0]
+    # exits per representative, and exit rows sorted by representative id
+    ecnt = jnp.zeros((C,), jnp.int32).at[
+        jnp.clip(E.orig, 0, C - 1)].add(E.valid.astype(jnp.int32))
+    ekey = jnp.where(E.valid, jnp.clip(E.orig, 0, C - 1), jnp.int32(C))
+    eorder = jnp.argsort(ekey, stable=True)
+    estart = jnp.cumsum(ecnt) - ecnt
+    # enumerate (parent, exit) pairs exactly like _expand_step enumerates
+    # (row, candidate) pairs: cumsum offsets + searchsorted
+    rep = jnp.clip(rep_of_row, 0, C - 1)
+    pcnt = jnp.where(active, ecnt[rep], 0).astype(jnp.int32)
+    offsets = jnp.cumsum(pcnt) - pcnt
+    needed = offsets[-1] + pcnt[-1]
+    slot = jnp.arange(C, dtype=jnp.int32)
+    src = jnp.clip(jnp.searchsorted(offsets, slot, side="right") - 1, 0, C - 1)
+    delta = slot - offsets[src]
+    ok = (slot < needed) & (delta < pcnt[src])
+    eidx = eorder[jnp.clip(estart[rep[src]] + delta, 0, C - 1)]
+    cols = jnp.arange(P.assign.shape[1], dtype=jnp.int32)
+    insub = (cols >= d0) & (cols <= d1)
+    assign = jnp.where(insub[None, :], E.assign[eidx], P.assign[src])
+    out = P._replace(assign=assign,
+                     factor=P.factor[src] * E.factor[eidx],
+                     valid=ok,
+                     orig=P.orig[src],
+                     lo=P.lo[src], hi=P.hi[src])
+    perm = jnp.argsort(jnp.logical_not(out.valid), stable=True)
+    return type(out)(*(x[perm] for x in out)), needed
+
+
+# ---------------------------------------------------------------------------
+# Host-driven executor
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Frame:
+    """Parked parent chunk of one ENTER_CHILD (the explicit chunk-stack)."""
+
+    F: Any                       # parent chunk
+    keys: Optional[jnp.ndarray]
+    hit: jnp.ndarray
+    hvals: jnp.ndarray
+    rep_of_row: jnp.ndarray
+    first_idx: Optional[jnp.ndarray]
+    n_reps: Optional[jnp.ndarray]
+    use_t1: bool
+    use_t2: bool
+
+
+@dataclass
+class _Span:
+    """One open ENTER…FOLD bracket on the executor's explicit stack:
+    the parent chunks still to run, the parked frame of the one currently
+    inside the subtree, and the folded continuations collected so far."""
+
+    enter_pc: int
+    fold_pc: int
+    parents: List[Any]
+    next_i: int
+    frame: Optional[_Frame]
+    conts: List[Any]
+
+
+class ScheduleExecutor:
+    """Execute a :class:`Schedule` over morsel chunks (host-driven).
+
+    An iterative interpreter over the linear op list; the state is the
+    current chunk list plus an explicit stack of :class:`_Span` records
+    (the parked parent chunks of open ENTER…FOLD brackets) — the
+    flattened form of the old per-node recursion.
+
+    Two orders compose here:
+
+    * **Within an op, chunks batch.**  All chunks at an op are processed
+      together, so device→host syncs are O(ops), not O(chunks): one
+      planning fetch plus one batched ``valid.any()`` admission check per
+      op execution, via :func:`hostsync.device_get`.
+    * **Across an ENTER…FOLD span, parent chunks run sequentially.**
+      Parent chunk *i*'s subtree is probed, expanded, and its results
+      *inserted into the tier-2 table* before chunk *i+1* probes — the
+      paper's cache[α, μ|α] reuse across morsels (Fig 10's hit rates
+      come precisely from later morsels hitting earlier morsels'
+      inserts; a probe-everything-then-insert pass would never hit
+      within a query).
+
+    ``mode="count"`` multiplies subtree counts into factors (tier 1 + 2);
+    ``mode="evaluate"`` materializes tuples: FOLD replays representative
+    row blocks through ``orig`` (tier-2 count tables are unusable for
+    materialization and are bypassed — caching stays an optimization,
+    never a correctness requirement).
+    """
+
+    def __init__(self, engine, mode: str = "count"):
+        if mode not in ("count", "evaluate"):
+            raise ValueError(mode)
+        self.engine = engine
+        self.schedule: Schedule = engine.schedule
+        self.mode = mode
+        self.cache = getattr(engine, "cache", None)
+        self.dedup = bool(getattr(engine, "dedup", False))
+        self._bracket: Dict[int, int] = {}
+        open_pcs: List[int] = []
+        for pc, op in enumerate(self.schedule.ops):
+            if op.kind == ENTER_CHILD:
+                open_pcs.append(pc)
+            elif op.kind == FOLD_CHILD:
+                self._bracket[open_pcs.pop()] = pc
+        self._total = jnp.zeros((), jnp.int64)
+        self._t1_collapsed = jnp.zeros((), jnp.int64)
+        self.subtree_launches = 0
+        # op-execution counters: span interiors re-run once per parent
+        # morsel, so the sync budget scales with these, never with the
+        # number of chunks inside one op execution
+        self.op_runs = {"expand": 0, "span": 0, "fold": 0, "emit": 0}
+        self._emitted: List[Tuple[Any, Any]] = []  # (assign, valid) only
+
+    # -- public entry points -------------------------------------------
+    def count(self) -> int:
+        self._run()
+        return int(device_get(self._total, "emit-total"))
+
+    def evaluate(self) -> Iterator[np.ndarray]:
+        """Yields (k, n) int32 blocks of result assignments (order cols)."""
+        self._run()
+        if not self._emitted:
+            return
+        blocks = device_get(self._emitted, "emit-rows")
+        for assign, valid in blocks:
+            mask = np.asarray(valid)
+            if mask.any():
+                yield np.asarray(assign)[mask]
+
+    def t1_rows_collapsed(self) -> int:
+        return int(device_get(self._t1_collapsed, "stats-t1"))
+
+    # -- the interpreter -----------------------------------------------
+    def _run(self) -> None:
+        ops = self.schedule.ops
+        stack: List[_Span] = []
+        chunks: List[Any] = [self.engine.initial_frontier()]
+        pc = 0
+        while pc < len(ops):
+            if stack and pc == stack[-1].fold_pc:
+                span = stack[-1]
+                span.conts.extend(
+                    self._fold_one(span.frame, chunks, ops[pc]))
+                if span.next_i < len(span.parents):
+                    F = span.parents[span.next_i]
+                    span.next_i += 1
+                    span.frame, R = self._enter_one(F, ops[span.enter_pc])
+                    chunks = [R]
+                    pc = span.enter_pc + 1
+                else:
+                    chunks = self._admit(span.conts, "fold-admit")
+                    stack.pop()
+                    pc += 1
+                continue
+            op = ops[pc]
+            if op.kind == ENTER_CHILD:
+                if not chunks:  # nothing reaches this subtree: skip span
+                    pc = self._bracket[pc] + 1
+                    continue
+                span = _Span(enter_pc=pc, fold_pc=self._bracket[pc],
+                             parents=chunks, next_i=1, frame=None,
+                             conts=[])
+                self.op_runs["span"] += 1
+                span.frame, R = self._enter_one(chunks[0], op)
+                stack.append(span)
+                chunks = [R]
+                pc += 1
+            elif op.kind == EXPAND:
+                chunks = self._op_expand(chunks, op)
+                pc += 1
+            else:  # EMIT
+                self._op_emit(chunks)
+                pc += 1
+        assert not stack, "unbalanced schedule"
+
+    # -- EXPAND --------------------------------------------------------
+    def _op_expand(self, chunks, op: Op):
+        if not chunks:
+            return []
+        self.op_runs["expand"] += 1
+        eng = self.engine
+        d = op.d
+        g_ai, rs, _ = eng.expand_plan(d)
+        cap = eng.capacity
+        # one planning fetch for every chunk at this op
+        lo_h, hi_h, va_h = device_get(
+            (jnp.stack([F.lo[:, g_ai] for F in chunks]),
+             jnp.stack([F.hi[:, g_ai] for F in chunks]),
+             jnp.stack([F.valid for F in chunks])), "expand-plan")
+        to_run: List[Any] = []
+        oversized: List[Tuple[Any, np.ndarray]] = []
+        for i, F in enumerate(chunks):
+            r0 = np.searchsorted(rs, lo_h[i], side="left")
+            r1 = np.searchsorted(rs, hi_h[i], side="left")
+            counts = np.where(va_h[i], r1 - r0, 0).astype(np.int64)
+            if int(counts.sum()) <= cap:
+                to_run.append(F)
+            else:
+                oversized.append((F, counts))
+        if oversized:
+            # one batched fetch for every chunk that needs morsel splitting
+            hosts = device_get([F._asdict() for F, _ in oversized],
+                               "expand-split")
+            for (_, counts), host in zip(oversized, hosts):
+                host = {k: np.asarray(v) for k, v in host.items()}
+                to_run.extend(eng.split_chunk_host(host, d, counts))
+        fn = eng._expand_fn(d)
+        return self._admit([fn(F)[0] for F in to_run], "expand-admit")
+
+    # -- ENTER_CHILD (one parent chunk) --------------------------------
+    def _enter_one(self, F, op: Op) -> Tuple[_Frame, Any]:
+        C = self.engine.capacity
+        use_t2 = (op.probe and self.mode == "count"
+                  and self.cache is not None and self.cache.enabled)
+        use_t1 = op.dedup and self.dedup
+        keys = (_pack_keys(F.assign, op.adhesion, op.node)
+                if (op.probe or op.dedup) else None)
+        if use_t2:
+            hit, hvals = self.cache.get(op.node).probe(keys, F.valid)
+        else:
+            hit = jnp.zeros((C,), bool)
+            hvals = jnp.zeros((C,), jnp.int64)
+        active = F.valid & ~hit
+        if use_t1:
+            first_idx, rep_of_row, n_reps = _dedup(keys, active)
+            self._t1_collapsed = self._t1_collapsed + (
+                jnp.sum(active.astype(jnp.int64)) - n_reps)
+            R = _make_rep_frontier(F, first_idx, n_reps)
+        else:
+            first_idx, n_reps = None, None
+            rep_of_row = jnp.arange(C, dtype=jnp.int32)
+            R = _identity_reps(F, active)
+        self.subtree_launches += 1
+        return _Frame(F=F, keys=keys, hit=hit, hvals=hvals,
+                      rep_of_row=rep_of_row, first_idx=first_idx,
+                      n_reps=n_reps, use_t1=use_t1, use_t2=use_t2), R
+
+    # -- FOLD_CHILD (one parent chunk's subtree exits) -----------------
+    def _fold_one(self, fr: _Frame, exits: List[Any], op: Op) -> List[Any]:
+        self.op_runs["fold"] += 1
+        if self.mode == "evaluate":
+            return self._fold_one_evaluate(fr, exits, op)
+        C = self.engine.capacity
+        cnt = jnp.zeros((C,), jnp.int64)
+        for E in exits:
+            cnt = cnt + _segment_counts(E, C)
+        if fr.use_t2:
+            if fr.use_t1:
+                rep_keys = fr.keys[jnp.clip(fr.first_idx, 0, C - 1)]
+                rep_active = jnp.arange(C) < fr.n_reps
+            else:
+                rep_keys = fr.keys
+                rep_active = fr.F.valid & ~fr.hit
+            # insert BEFORE the next parent chunk's probe (cross-morsel
+            # reuse — the entire point of tier 2 within one query)
+            self.cache.get(op.node).insert(rep_keys, cnt, rep_active)
+            self.cache.maybe_resize(op.node)
+        return [_apply_counts(fr.F, fr.hit, fr.hvals, fr.rep_of_row, cnt)]
+
+    def _fold_one_evaluate(self, fr: _Frame, exits: List[Any],
+                           op: Op) -> List[Any]:
+        if not exits:
+            return []
+        C = self.engine.capacity
+        # one planning fetch per fold: exit orig/valid + the parent rep map
+        exits_h, (ror_h, active_h) = device_get(
+            ([(E.orig, E.valid) for E in exits],
+             (fr.rep_of_row, fr.F.valid & ~fr.hit)), "replay-plan")
+        active_dev = fr.F.valid & ~fr.hit
+        out: List[Any] = []
+        for E, (eorig, evalid) in zip(exits, exits_h):
+            ecnt = np.zeros(C, np.int64)
+            np.add.at(ecnt, np.clip(eorig, 0, C - 1),
+                      evalid.astype(np.int64))
+            pcnt = np.where(active_h, ecnt[np.clip(ror_h, 0, C - 1)], 0)
+            for mask in _pack_parent_morsels(pcnt, C):
+                cont, _ = _replay_step(fr.F, active_dev & jnp.asarray(mask),
+                                       fr.rep_of_row, E,
+                                       d0=op.sub_first, d1=op.sub_last)
+                out.append(cont)
+        return out
+
+    # -- EMIT ----------------------------------------------------------
+    def _op_emit(self, chunks) -> None:
+        self.op_runs["emit"] += 1
+        if self.mode == "count":
+            for F in chunks:
+                self._total = self._total + jnp.sum(
+                    jnp.where(F.valid, F.factor, 0))
+        else:
+            # retain only what emission needs — holding whole Frontiers
+            # until the final fetch would keep factor/orig/lo/hi alive for
+            # every result chunk of the query
+            self._emitted.extend((F.assign, F.valid) for F in chunks)
+
+    # -- shared --------------------------------------------------------
+    def _admit(self, out, label: str):
+        """Drop empty chunks with ONE batched host sync for the whole op."""
+        if not out:
+            return []
+        keep = device_get(jnp.stack([F.valid.any() for F in out]), label)
+        return [F for F, k in zip(out, np.asarray(keep)) if k]
+
+
+def _pack_parent_morsels(pcnt: np.ndarray, cap: int) -> List[np.ndarray]:
+    """Greedy-pack parent rows into masks whose total replay size fits one
+    chunk.  A single parent's pair count is <= the exit chunk's valid rows
+    <= cap, so packing always succeeds."""
+    masks: List[np.ndarray] = []
+    cur = np.zeros(pcnt.shape[0], bool)
+    acc = 0
+    for i in np.flatnonzero(pcnt > 0):
+        c = int(pcnt[i])
+        if acc and acc + c > cap:
+            masks.append(cur)
+            cur = np.zeros(pcnt.shape[0], bool)
+            acc = 0
+        cur[i] = True
+        acc += c
+    if acc:
+        masks.append(cur)
+    return masks
+
+
+# ---------------------------------------------------------------------------
+# Static (fully-jittable) executor
+# ---------------------------------------------------------------------------
+
+
+def execute_static(schedule: Schedule, engine, F0, tables: Dict[int, tuple],
+                   cfg) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[int, tuple]]:
+    """Trace-time interpreter of ``schedule``: one pure computation.
+
+    Fixed chunk capacity (overflow is flagged, not split), tier-2 tables
+    threaded functionally (``tables[c]`` is the (keys, vals, used, stamp,
+    cost) tuple of ``core/cache.py``), LRU tick statically unrolled.
+    Returns ``(count, overflow, tables)`` — ``shard_map``-able as-is.
+    """
+    from .cache import _insert as cache_insert, _probe as cache_probe
+    C = engine.capacity
+    F = F0
+    ov = jnp.zeros((), bool)
+    stack: List[tuple] = []
+    tick = 0
+    total = jnp.zeros((), jnp.int64)
+    for op in schedule.ops:
+        if op.kind == EXPAND:
+            F, needed = engine._expand_fn(op.d)(F)
+            ov = ov | (needed > C)
+        elif op.kind == ENTER_CHILD:
+            keys = (_pack_keys(F.assign, op.adhesion, op.node)
+                    if (op.probe or op.dedup) else None)
+            use_t2 = op.probe and op.node in tables
+            if use_t2:
+                tk, tv, tu, ts, tc = tables[op.node]
+                tick += 1
+                hit, hvals, ts = cache_probe(tk, tv, tu, ts, keys, F.valid,
+                                             jnp.int32(tick))
+                tables = dict(tables)
+                tables[op.node] = (tk, tv, tu, ts, tc)
+            else:
+                hit = jnp.zeros((C,), bool)
+                hvals = jnp.zeros((C,), jnp.int64)
+            active = F.valid & ~hit
+            if op.dedup:
+                first_idx, rep_of_row, n_reps = _dedup(keys, active)
+                R = _make_rep_frontier(F, first_idx, n_reps)
+            else:
+                first_idx, n_reps = None, None
+                rep_of_row = jnp.arange(C, dtype=jnp.int32)
+                R = _identity_reps(F, active)
+            stack.append((F, keys, hit, hvals, rep_of_row, first_idx,
+                          n_reps, active, use_t2))
+            F = R
+        elif op.kind == FOLD_CHILD:
+            cnt = _segment_counts(F, C)
+            (P, keys, hit, hvals, rep_of_row, first_idx, n_reps, active,
+             use_t2) = stack.pop()
+            if use_t2:
+                if op.dedup:
+                    rep_keys = keys[jnp.clip(first_idx, 0, C - 1)]
+                    rep_active = jnp.arange(C) < n_reps
+                else:
+                    rep_keys, rep_active = keys, active
+                tick += 1
+                out = cache_insert(*tables[op.node], rep_keys, cnt,
+                                   jnp.maximum(cnt, 1), rep_active,
+                                   jnp.int32(tick), policy=cfg.policy,
+                                   rounds=min(cfg.ways, 8))
+                tables = dict(tables)
+                tables[op.node] = out[:5]
+            F = _apply_counts(P, hit, hvals, rep_of_row, cnt)
+        else:  # EMIT
+            total = jnp.sum(jnp.where(F.valid, F.factor, 0))
+    return total, ov, tables

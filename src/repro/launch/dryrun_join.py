@@ -16,7 +16,7 @@ import time
 import numpy as np
 import jax
 
-from ..core import choose_plan, cycle_query, path_query
+from ..core import CacheConfig, choose_plan, cycle_query, path_query
 from ..core.db import graph_db
 from ..core.distributed import make_distributed_count
 from ..data.graphs import barabasi_albert
@@ -31,9 +31,9 @@ def lower_join(multi_pod: bool, capacity: int = 1 << 14,
     q = cycle_query(5) if query == "5-cycle" else path_query(5)
     td, order = choose_plan(q, db.stats())
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    fn, eng = make_distributed_count(q, td, order, db, mesh,
-                                     capacity=capacity,
-                                     cache_slots=cache_slots, axes=axes)
+    fn, eng = make_distributed_count(
+        q, td, order, db, mesh, capacity=capacity,
+        cache=CacheConfig(policy="direct", slots=cache_slots), axes=axes)
     with mesh:
         t0 = time.time()
         lowered = fn.lower()

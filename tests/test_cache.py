@@ -44,7 +44,8 @@ def test_policy_and_size_never_change_counts(small_graphs, cfg, qf):
     db = small_graphs[2]
     td, order = choose_plan(q, db.stats())
     baseline = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9,
-                                 dedup=False, cache_slots=0).count()
+                                 dedup=False,
+                                 cache=CacheConfig(slots=0)).count()
     eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9, cache=cfg)
     assert eng.count() == baseline
 
@@ -151,12 +152,12 @@ def test_device_cache_costaware_protects_expensive():
 
 
 def test_tier1_dedup_independent_of_tier2(small_graphs):
-    """cache_slots=0 disables only tier 2 — tier-1 dedup must still run."""
+    """slots=0 disables only tier 2 — tier-1 dedup must still run."""
     q = cycle_query(5)
     db = small_graphs[2]
     td, order = choose_plan(q, db.stats())
     eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 10,
-                            cache_slots=0, dedup=True)
+                            cache=CacheConfig(slots=0), dedup=True)
     assert eng.count() == lftj_count(q, order, db)
     assert eng.stats["tier1_rows_collapsed"] > 0
     assert eng.stats["tier2_probes"] == 0

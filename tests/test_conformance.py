@@ -15,8 +15,9 @@ from repro.core import (CacheConfig, choose_plan, clftj_count,
                         clftj_evaluate, cycle_query, lftj_count,
                         lftj_evaluate, path_query, star_query, ytd_count,
                         ytd_evaluate)
+from repro.core import engine
 from repro.core.bruteforce import brute_force_evaluate
-from repro.core.cached_frontier import JaxCachedTrieJoin
+from repro.core.cached_frontier import JaxCachedTrieJoin, jax_clftj_evaluate
 from repro.core.db import graph_db
 from repro.core.frontier import jax_lftj_count, jax_lftj_evaluate
 
@@ -87,6 +88,49 @@ def test_tuple_sets_identical_across_engines(corpus_dbs, qname, q):
                 for t in ytd_evaluate(q, td, db)} == want
         jax_rows = jax_lftj_evaluate(q, order, db, capacity=1 << 10)
         assert _tuple_set(jax_rows.tolist(), order, q.variables) == want
+        jax_c_rows = jax_clftj_evaluate(q, td, order, db, capacity=1 << 10)
+        assert _tuple_set(jax_c_rows.tolist(), order, q.variables) == want
+
+
+@pytest.mark.parametrize("cfg", CACHE_POLICIES,
+                         ids=["direct", "assoc4", "cost4", "adaptive"])
+def test_jax_clftj_evaluate_tuple_sets_every_policy(corpus_dbs, cfg):
+    """The full corpus through JAX CLFTJ *evaluation* under each tier-2
+    policy config: materialized tuple sets must equal the host CLFTJ
+    oracle's (and brute force) — caching may never change an answer, and
+    tier-1 replay must reconstruct every deduplicated row block."""
+    db = corpus_dbs[1]
+    for qname, q in CORPUS:
+        td, order = choose_plan(q, db.stats())
+        want = brute_force_evaluate(q, db)
+        ref = _tuple_set(clftj_evaluate(q, td, order, db), order,
+                         q.variables)
+        assert ref == want
+        rows = jax_clftj_evaluate(q, td, order, db, capacity=1 << 8,
+                                  cache=cfg)
+        got = _tuple_set(rows.tolist(), order, q.variables)
+        assert got == want, f"{qname} under {cfg.policy}"
+        # results are set-semantics: replay must emit each tuple exactly
+        # once (a duplicated (parent, exit) pair would hide in the set)
+        assert rows.shape[0] == len(got), f"{qname}: duplicate rows"
+
+
+def test_engine_facade_evaluate_jax_backend(corpus_dbs):
+    """engine.evaluate(..., algorithm='clftj', backend='jax') is the same
+    tuple set as the ref backend, with tier-2 caching enabled."""
+    db = corpus_dbs[0]
+    for qname, q in CORPUS[:4]:
+        res_jax = engine.evaluate(q, db, algorithm="clftj", backend="jax",
+                                  capacity=1 << 9,
+                                  cache=CacheConfig(policy="setassoc",
+                                                    slots=128, assoc=4))
+        res_ref = engine.evaluate(q, db, algorithm="clftj", backend="ref")
+        got = _tuple_set(res_jax.tuples.tolist(), res_jax.order, q.variables)
+        want = _tuple_set(res_ref.tuples.tolist(), res_ref.order,
+                          q.variables)
+        assert got == want and res_jax.count == res_ref.count, qname
+        assert res_jax.plan_s >= 0 and res_jax.exec_s >= 0
+        assert res_jax.wall_s >= res_jax.plan_s + res_jax.exec_s - 1e-6
 
 
 @pytest.mark.parametrize("cfg", CACHE_POLICIES,

@@ -3,7 +3,7 @@ cache-tier configurations)."""
 import numpy as np
 import pytest
 
-from repro.core import (choose_plan, lftj_count, lftj_evaluate,
+from repro.core import (CacheConfig, choose_plan, lftj_count, lftj_evaluate,
                         cycle_query, path_query, lollipop_query)
 from repro.core.cached_frontier import JaxCachedTrieJoin
 from repro.core.frontier import JaxTrieJoin, jax_lftj_count, \
@@ -29,9 +29,9 @@ def test_vectorized_lftj_matches_reference(small_graphs, qf, cap):
 
 @pytest.mark.parametrize("kwargs", [
     dict(),                                  # both tiers
-    dict(cache_slots=0),                     # tier-1 only
+    dict(cache=CacheConfig(slots=0)),        # tier-1 only
     dict(dedup=False),                       # tier-2 only
-    dict(dedup=False, cache_slots=0),        # vanilla
+    dict(dedup=False, cache=CacheConfig(slots=0)),   # vanilla
 ])
 def test_cached_engine_tiers(small_graphs, kwargs):
     q = cycle_query(5)

@@ -73,12 +73,14 @@ def test_corpus_bounded_cache_invariant(seed, cap):
 
 if HAVE_HYPOTHESIS:
 
+    @pytest.mark.slow
     @settings(max_examples=25, deadline=None)
     @given(st.integers(0, 10 ** 6))
     def test_all_engines_match_bruteforce(seed):
         db, q = _make_case(seed)
         _assert_engines_match(db, q)
 
+    @pytest.mark.slow
     @settings(max_examples=10, deadline=None)
     @given(st.integers(0, 10 ** 6), st.integers(0, 6))
     def test_bounded_cache_invariant(seed, cap):

@@ -1,0 +1,153 @@
+"""Schedule IR: lowering rules, executor equivalence, deprecation shims,
+and the Result timing split.
+
+The lowered op list is the single source of control flow for all three
+engines (host LFTJ, host CLFTJ, distributed static CLFTJ) — these tests
+pin its structural invariants so an engine can trust the schedule instead
+of re-deriving the TD recursion."""
+import numpy as np
+import pytest
+
+from repro.core import (CacheConfig, Op, Schedule, choose_plan, clftj_count,
+                        cycle_query, engine, lftj_count, lower, path_query,
+                        star_query)
+from repro.core.cached_frontier import JaxCachedTrieJoin, jax_clftj_count
+from repro.core.clftj_ref import Plan
+from repro.core.db import graph_db
+from repro.core.schedule import EMIT, ENTER_CHILD, EXPAND, FOLD_CHILD
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(99)
+    return graph_db(rng.integers(0, 14, size=(90, 2)))
+
+
+# -- lowering ---------------------------------------------------------------
+
+def test_trivial_lowering_is_expand_then_emit():
+    s = lower(4)
+    assert [op.kind for op in s.ops] == [EXPAND] * 4 + [EMIT]
+    assert [op.d for op in s.ops[:-1]] == [0, 1, 2, 3]
+
+
+def test_td_lowering_brackets_and_depths(db):
+    q = path_query(4)
+    td, order = choose_plan(q, db.stats())
+    plan = Plan.build(td, order)
+    s = lower(len(order), plan=plan, cacheable=lambda c: True)
+    # every EXPAND depth appears exactly once, in order
+    assert [op.d for op in s.ops if op.kind == EXPAND] == list(
+        range(len(order)))
+    # ENTER/FOLD bracket properly per node and FOLD knows its subtree span
+    opens = []
+    for op in s.ops:
+        if op.kind == ENTER_CHILD:
+            opens.append(op.node)
+        elif op.kind == FOLD_CHILD:
+            assert opens.pop() == op.node
+            assert 0 <= op.sub_first <= op.sub_last < len(order)
+            assert op.adhesion == tuple(plan.adhesion_idx[op.node])
+    assert not opens and s.ops[-1].kind == EMIT
+    # one ENTER per non-root TD node
+    n_children = sum(1 for v in range(td.num_nodes) if td.parent[v] >= 0)
+    assert sum(1 for op in s.ops if op.kind == ENTER_CHILD) == n_children
+
+
+def test_lowering_flags_follow_cacheable_and_dedup(db):
+    q = cycle_query(5)
+    td, order = choose_plan(q, db.stats())
+    plan = Plan.build(td, order)
+    s_on = lower(len(order), plan=plan, cacheable=lambda c: True, dedup=True)
+    s_off = lower(len(order), plan=plan, cacheable=lambda c: False,
+                  dedup=True)
+    s_nod = lower(len(order), plan=plan, cacheable=lambda c: True,
+                  dedup=False)
+    for op in s_on.ops:
+        if op.kind == ENTER_CHILD:
+            assert op.probe and op.dedup
+    for op in s_off.ops:
+        if op.kind == ENTER_CHILD:
+            assert not op.probe and not op.dedup
+    for op in s_nod.ops:
+        if op.kind == ENTER_CHILD:
+            assert op.probe and not op.dedup
+
+
+def test_schedule_validation_rejects_malformed():
+    with pytest.raises(ValueError):
+        Schedule((Op(EXPAND, d=0), Op(EMIT)), n=2)      # missing depth 1
+    with pytest.raises(ValueError):
+        Schedule((Op(EXPAND, d=0),), n=1)               # no EMIT
+    with pytest.raises(ValueError):
+        Schedule((Op(EXPAND, d=0), Op(ENTER_CHILD, node=1), Op(EMIT)), n=1)
+
+
+def test_engine_schedule_is_shared_control_flow(db):
+    """The engine instance carries exactly one lowered schedule, and its
+    describe() names every op — the op list IS the plan artifact."""
+    q = star_query(3)
+    td, order = choose_plan(q, db.stats())
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9)
+    text = eng.schedule.describe()
+    assert "EXPAND" in text and "EMIT" in text
+    if td.num_nodes > 1:
+        assert "ENTER_CHILD" in text and "FOLD_CHILD" in text
+
+
+# -- executor equivalence on a nested (multi-bag) TD ------------------------
+
+def test_executor_count_matches_reference_on_nested_td(db):
+    for qf in (path_query(5), star_query(4), cycle_query(5)):
+        td, order = choose_plan(qf, db.stats())
+        want = lftj_count(qf, order, db)
+        assert clftj_count(qf, td, order, db) == want
+        eng = JaxCachedTrieJoin(qf, td, order, db, capacity=1 << 9)
+        assert eng.count() == want
+
+
+# -- deprecation shims ------------------------------------------------------
+
+def test_cache_slots_deprecated_everywhere(db):
+    q = cycle_query(4)
+    td, order = choose_plan(q, db.stats())
+    want = lftj_count(q, order, db)
+    with pytest.warns(DeprecationWarning, match="cache_slots"):
+        eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9,
+                                cache_slots=64)
+    assert eng.count() == want
+    assert eng.cache_config.policy == "direct"
+    assert eng.cache_config.slots == 64
+    with pytest.warns(DeprecationWarning, match="cache_slots"):
+        assert jax_clftj_count(q, td, order, db, capacity=1 << 9,
+                               cache_slots=64) == want
+    with pytest.warns(DeprecationWarning, match="cache_slots"):
+        res = engine.count(q, db, td=td, order=order, capacity=1 << 9,
+                           cache_slots=64)
+    assert res.count == want
+
+
+def test_cache_config_wins_over_legacy_slots(db):
+    """An explicit CacheConfig must not be overridden by the shim."""
+    q = cycle_query(4)
+    td, order = choose_plan(q, db.stats())
+    cfg = CacheConfig(policy="setassoc", slots=32, assoc=4)
+    with pytest.warns(DeprecationWarning):
+        eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9,
+                                cache_slots=1 << 12, cache=cfg)
+    assert eng.cache_config is cfg
+
+
+# -- Result timing split ----------------------------------------------------
+
+def test_result_separates_plan_compile_exec(db):
+    q = cycle_query(4)
+    res = engine.count(q, db, capacity=1 << 9)
+    assert res.plan_s >= 0 and res.compile_s >= 0 and res.exec_s >= 0
+    assert res.wall_s == pytest.approx(
+        res.plan_s + res.compile_s + res.exec_s, abs=5e-3)
+    # a second run with the same shapes reuses the jit cache: compile time
+    # must (essentially) vanish while the answer is unchanged
+    res2 = engine.count(q, db, capacity=1 << 9)
+    assert res2.count == res.count
+    assert res2.compile_s <= max(0.05, res.compile_s)
