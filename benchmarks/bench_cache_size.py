@@ -1,7 +1,7 @@
 """Paper Fig 10: dynamic cache size.  CLFTJ count under bounded caches —
 speedup grows with capacity; even small caches deliver most of it.
 
-Two sweeps:
+Three sweeps:
 
 * ``ref``: the host reference engine over capacity bounds (the paper's
   figure as-is).
@@ -10,6 +10,10 @@ Two sweeps:
   person attribute), reporting the per-policy hit rate — the signal the
   dynamic sizing controller consumes.  At equal slots, set-associative
   LRU should meet or beat direct-mapped (conflict misses on hot keys).
+* ``slab``: the *evaluation-mode* memory knob (DESIGN.md §2.6): replay
+  hit rate vs payload arena rows on the same workload — the paper's cache
+  size ↔ recomputation trade-off measured on materialization, where a
+  too-small arena shows up as epoch flushes, not wrong answers.
 """
 from __future__ import annotations
 
@@ -74,9 +78,39 @@ def jax_policy_sweep(n: int = 4, capacity: int = 1 << 11) -> dict:
     return rates
 
 
+SLAB_ROWS = (1 << 10, 1 << 13, 1 << 16)
+
+
+def slab_budget_sweep(n: int = 4, capacity: int = 1 << 11) -> dict:
+    """Evaluation-mode replay hit rate vs payload arena size on the skewed
+    zigzag — the paper's size↔recomputation trade-off on materialization:
+    a small arena epoch-flushes and re-stores (low warm hit rate), a large
+    one replays nearly every recurring bag.  Cold + warm pass per size;
+    returns {payload_rows: warm record}."""
+    from repro.core.cached_frontier import JaxCachedTrieJoin
+    from .bench_eval_queries import small_skewed_db
+    from .common import run_jax_eval
+    db = small_skewed_db()
+    q = zigzag_cycle(n)
+    td = TDS[n]["TD1-person"]
+    td.validate(q)
+    order = td.strongly_compatible_order()
+    out = {}
+    for rows in SLAB_ROWS:
+        cache = CacheConfig(policy="setassoc", slots=1 << 14, assoc=8,
+                            cache_payloads=True, payload_rows=rows)
+        eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
+                                cache=cache)
+        run_jax_eval(f"fig10slab/{n}-zigzag/payload-r{rows}-cold", eng)
+        out[rows] = run_jax_eval(
+            f"fig10slab/{n}-zigzag/payload-r{rows}-warm", eng)
+    return out
+
+
 def main() -> None:
     ref_size_sweep()
     jax_policy_sweep()
+    slab_budget_sweep()
 
 
 if __name__ == "__main__":

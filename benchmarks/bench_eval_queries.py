@@ -1,18 +1,31 @@
 """Paper Figs 8/9: full query evaluation (materialized results) for
 {3-4}-path and {3-5}-cycle, plus a representative random-graph query —
 host references and the JAX CLFTJ evaluate path (schedule-executor EMIT),
-the latter with the plan/compile/exec wall-time split."""
+the latter with the plan/compile/exec wall-time split.
+
+Two tier-2 variants of every JAX evaluation run: ``nocache`` (the PR-2
+bypass baseline) and ``payload`` (row-block caching, DESIGN.md §2.6).  The
+``recur`` section is the paper §3.4 evaluation claim made measurable: the
+recurring-bag zigzag cycles on the Zipf-skewed IMDB-analogue, where
+capacity ≪ frontier forces many parent morsels per span and later morsels
+replay earlier morsels' factorized blocks (``replay_hits`` in the derived
+column / BENCH json)."""
 from __future__ import annotations
 
-from repro.core import (choose_plan, clftj_evaluate, engine, lftj_evaluate,
+from repro.core import (CacheConfig, bowtie_query, choose_plan,
+                        clftj_evaluate, engine, lftj_evaluate,
                         ytd_evaluate, path_query, cycle_query,
                         random_graph_query)
 from repro.data.graphs import dataset
 
-from .common import run_engine_result, run_ref
+from .bench_td_skew import TDS, zigzag_cycle
+from .common import run_engine_result, run_jax_eval, run_ref
+
+PAYLOAD = CacheConfig(policy="setassoc", slots=1 << 14, assoc=8,
+                      cache_payloads=True, payload_rows=1 << 17)
 
 
-def main() -> None:
+def fig8_sweep() -> None:
     for ds in ("wiki-vote-like", "gnutella-like"):
         db = dataset(ds)
         queries = [("3-path", path_query(3)), ("4-path", path_query(4)),
@@ -28,10 +41,65 @@ def main() -> None:
             run_ref(f"fig8/{ds}/{qname}/ytd-eval",
                     lambda c: len(ytd_evaluate(q, td, db, c)))
             run_engine_result(
-                f"fig8/{ds}/{qname}/jax-clftj-eval",
+                f"fig8/{ds}/{qname}/jax-clftj-eval-nocache",
                 lambda: engine.evaluate(q, db, algorithm="clftj",
                                         backend="jax", td=td, order=order,
                                         capacity=1 << 14))
+            run_engine_result(
+                f"fig8/{ds}/{qname}/jax-clftj-eval-payload",
+                lambda: engine.evaluate(q, db, algorithm="clftj",
+                                        backend="jax", td=td, order=order,
+                                        capacity=1 << 14, cache=PAYLOAD))
+
+
+def small_skewed_db():
+    """A scaled-down skewed_db (same Zipf shape): full-size zigzag
+    evaluation materializes tens of millions of tuples — counting-bench
+    territory, not a materialization benchmark."""
+    from repro.core.db import Database
+    from repro.data.graphs import zipf_bipartite
+    male = zipf_bipartite(800, 500, 2500, 1.3, 0.4, seed=6)
+    female = zipf_bipartite(800, 500, 2500, 1.3, 0.4, seed=7)
+    return Database({"male_cast": male, "female_cast": female})
+
+
+def recurring_bag_sweep(capacity: int = 1 << 11) -> dict:
+    """Evaluation on the recurring-bag workloads (the skewed zigzag cycle
+    and the clique-style bowtie): payload caching vs the cache-off
+    baseline, each engine evaluated twice — ``cold`` pays for block
+    storage, ``warm`` is the recurring-subjoin case the cache exists for
+    (paper §3.4): the whole bag replays from the slab.  Returns
+    {name: seconds}."""
+    from repro.core.cached_frontier import JaxCachedTrieJoin
+    from repro.data.graphs import barabasi_albert
+    from repro.core.db import graph_db
+
+    q4 = zigzag_cycle(4)
+    td4 = TDS[4]["TD1-person"]
+    td4.validate(q4)
+    cases = [("4-zigzag", q4, td4, td4.strongly_compatible_order(),
+              small_skewed_db())]
+    qb = bowtie_query()
+    dbb = graph_db(barabasi_albert(600, 5, seed=9))
+    tdb, orderb = choose_plan(qb, dbb.stats())
+    cases.append(("bowtie", qb, tdb, orderb, dbb))
+
+    out = {}
+    for name, q, td, order, db in cases:
+        for tag, cache in (("nocache", CacheConfig(slots=0)),
+                           ("payload", PAYLOAD)):
+            eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
+                                    cache=cache)
+            for phase in ("cold", "warm"):
+                rec = run_jax_eval(
+                    f"recur/{name}/jax-clftj-eval-{tag}-{phase}", eng)
+                out[f"{name}/{tag}/{phase}"] = rec["seconds"]
+    return out
+
+
+def main() -> None:
+    fig8_sweep()
+    recurring_bag_sweep()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the ROADMAP command, minus the slow-marked sweeps.
+# Usage: scripts/verify.sh [extra pytest args]
+#   scripts/verify.sh -m tier1     # quick pre-flight (core invariants only)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q -m "not slow" "$@"

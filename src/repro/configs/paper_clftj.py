@@ -30,6 +30,8 @@ class JoinEngineConfig:
     cache_assoc: int = 4           # ways per set (setassoc/costaware)
     cache_dynamic: bool = False    # sizing controller on/off
     cache_budget: Optional[int] = None  # max total slots across node tables
+    cache_payloads: bool = False   # eval-mode row-block replay (DESIGN §2.6)
+    payload_rows: int = 1 << 15    # slab arena rows per node table
     dedup: bool = True             # tier-1 intra-chunk dedup
     impl: str = "bsearch"          # bsearch | pallas
 
@@ -37,7 +39,9 @@ class JoinEngineConfig:
         """Tier-2 device-cache config for the vectorized engine."""
         return CacheConfig(policy=self.cache_policy, slots=self.cache_slots,
                            assoc=self.cache_assoc, dynamic=self.cache_dynamic,
-                           budget=self.cache_budget)
+                           budget=self.cache_budget,
+                           cache_payloads=self.cache_payloads,
+                           payload_rows=self.payload_rows)
 
 
 PAPER_FAITHFUL = JoinEngineConfig(
@@ -53,3 +57,6 @@ TPU_COST_AWARE = JoinEngineConfig(cache_policy="costaware", cache_assoc=4)
 TPU_ADAPTIVE = JoinEngineConfig(      # Fig 10's size knob made adaptive
     cache_policy="setassoc", cache_assoc=4, cache_slots=1 << 10,
     cache_dynamic=True, cache_budget=1 << 18)
+TPU_EVAL_REPLAY = JoinEngineConfig(   # §3.4 evaluation: replay-on-hit
+    cache_policy="setassoc", cache_assoc=8, cache_slots=1 << 14,
+    cache_payloads=True, payload_rows=1 << 17)

@@ -6,9 +6,9 @@ Layers:
   * engine    — frontier / cached_frontier (TPU-native vectorized CLFTJ)
   * facade    — engine.count / engine.evaluate / engine.plan_query
 """
-from .cq import (CQ, Atom, cq, path_query, cycle_query, clique_query,
-                 lollipop_query, random_graph_query, star_query,
-                 two_relation_cycle_query)
+from .cq import (CQ, Atom, bowtie_query, cq, path_query, cycle_query,
+                 clique_query, lollipop_query, random_graph_query,
+                 star_query, two_relation_cycle_query)
 from .db import Counters, Database, graph_db
 from .td import TreeDecomposition, singleton_td
 from .decompose import (choose_plan, enumerate_tds, generic_decompose,

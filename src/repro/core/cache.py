@@ -30,6 +30,19 @@ shrinks tables whose occupancy stays low (memory handed back).  Resizing
 rehashes resident entries into the new table with one batched insert;
 entries lost to rehash collisions are a performance non-event by the
 optionality property above.
+
+**Row-block payloads (DESIGN.md §2.6).**  With ``cache_payloads=True`` a
+table additionally stores, per way, an ``(offset, length)`` pointer into a
+per-node *slab arena* of factorized row blocks: the subtree-column
+assignments of one adhesion key's complete subtree result (paper §3.4's
+factorized intermediates).  Evaluation-mode hits replay the block instead
+of re-expanding the bag.  The slab is a bump-pointer arena — blocks whose
+keys are evicted become dead space until the arena wraps, at which point
+every payload is invalidated in one epoch *flush* (keys and counts stay
+resident for count mode).  A payload-bearing hit requires ``pay_len >= 0``;
+the metadata planes ride :func:`_insert`'s election (the ``pay`` pytree)
+on every insert, with count-mode inserts writing the ``-1`` sentinel, so
+an evicting write can never leave a stale block reachable under a new key.
 """
 from __future__ import annotations
 
@@ -73,6 +86,20 @@ class CacheConfig:
       the table looks conflict-bound (occupancy > 1/2).
     * ``shrink_below_occupancy``: shrink when occupancy stays under this.
     * ``enabled_nodes``: restrict caching to these TD nodes (None = all).
+    * ``cache_payloads``: additionally store factorized row *blocks* per
+      entry (evaluation-mode replay-on-hit, DESIGN.md §2.6).
+    * ``payload_rows``: per-node slab arena size in rows (the memory half
+      of the paper's size↔recomputation trade-off for evaluation).
+    * ``payload_throttle_probes`` / ``payload_throttle_hit_rate``: the
+      admission throttle (§3.4's admission flexibility applied to
+      blocks): after that many evaluation probes a table whose payload
+      hit rate is still below the floor stops *storing* new blocks —
+      workloads whose adhesion keys never recur shouldn't pay the
+      arena-write overhead.  Splicing of already-stored blocks, and
+      storing again if the rate recovers, are unaffected.
+    * ``payload_probation``: while throttled, still store on every Nth
+      throttled fold (0 disables) — with nothing resident the hit rate
+      could never recover on a workload shift.
     """
 
     policy: str = "direct"
@@ -86,6 +113,11 @@ class CacheConfig:
     grow_below_hit_rate: float = 0.5
     shrink_below_occupancy: float = 0.125
     enabled_nodes: Optional[frozenset] = None
+    cache_payloads: bool = False
+    payload_rows: int = 1 << 15
+    payload_throttle_probes: int = 1 << 15
+    payload_throttle_hit_rate: float = 0.01
+    payload_probation: int = 16
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -93,6 +125,8 @@ class CacheConfig:
                              f"expected one of {POLICIES}")
         if self.assoc < 1:
             raise ValueError("assoc must be >= 1")
+        if self.cache_payloads and self.payload_rows < 1:
+            raise ValueError("cache_payloads needs payload_rows >= 1")
 
     @property
     def ways(self) -> int:
@@ -131,7 +165,7 @@ def _probe(tkeys, tvals, tused, tstamp, keys, active, tick):
 @functools.partial(jax.jit, static_argnames=("policy", "rounds"))
 def _insert(tkeys, tvals, tused, tstamp, tcost,
             keys, vals, costs, active, tick, *, policy: str,
-            rounds: int = 1):
+            rounds: int = 1, pay=None):
     """Batched fill.  Victim selection per policy.
 
     Each round elects exactly one writer per set (scatter-max of the row
@@ -141,18 +175,38 @@ def _insert(tkeys, tvals, tused, tstamp, tcost,
     (≈ the way count) re-reads the updated table so batch collisions retry
     into the remaining ways instead of being dropped — without it an N-way
     table admits N× fewer entries per launch than a direct-mapped one of
-    equal size."""
+    equal size.
+
+    ``pay`` (``None`` or ``(tpoff, tplen, poff, plen)``, resolved at trace
+    time) carries the payload metadata planes through the same election.
+    Two payload-specific rules:
+
+    * every admitted write also writes ``(poff, plen)`` — count-mode
+      inserts pass the ``plen = -1`` sentinel, so an eviction can never
+      leave the victim's block reachable under the new key;
+    * a resident key only blocks re-admission when it already carries a
+      payload (or the candidate has none): a payload-bearing candidate
+      refreshes its resident way in place, so evaluation mode can attach
+      blocks to keys first seen by ``count()``.
+    """
     n_sets = tkeys.shape[0]
     C = keys.shape[0]
     rows = jnp.arange(C, dtype=jnp.int32)
     sets = jnp.where(active, _hash_sets(keys, n_sets), 0)
     remaining = active
+    if pay is not None:
+        tpoff, tplen, poff, plen = pay
+        cand_pay = plen >= 0
     n_admit = jnp.int32(0)
     n_evict = jnp.int32(0)
     for _ in range(max(1, rounds)):
         way_used = tused[sets]                       # (C, W)
         resident = way_used & (tkeys[sets] == keys[:, None])
-        rem = remaining & ~resident.any(axis=1)      # dup already admitted
+        if pay is not None:
+            blocking = resident & ((tplen[sets] >= 0) | ~cand_pay[:, None])
+        else:
+            blocking = resident                      # dup already admitted
+        rem = remaining & ~blocking.any(axis=1)
         any_free = ~way_used.all(axis=1)
         free_way = jnp.argmin(way_used, axis=1)      # first invalid way
         if policy == "costaware":
@@ -162,10 +216,16 @@ def _insert(tkeys, tvals, tused, tstamp, tcost,
             contested = jnp.argmin(jnp.where(way_used, tstamp[sets],
                                              jnp.int32(2 ** 31 - 1)), axis=1)
         victim = jnp.where(any_free, free_way, contested)
+        has_res = jnp.zeros((C,), bool)
+        if pay is not None:
+            # a payload-less resident is refreshed in its own way
+            has_res = resident.any(axis=1)
+            victim = jnp.where(has_res, jnp.argmax(resident, axis=1),
+                               victim)
         admit = rem
         if policy == "costaware":
             incumbent = tcost[sets, victim]
-            admit = admit & (any_free | (costs >= incumbent))
+            admit = admit & (has_res | any_free | (costs >= incumbent))
         # elect one admitted writer per set (highest row index)
         winner = jnp.full((n_sets,), -1, jnp.int32).at[sets].max(
             jnp.where(admit, rows, -1))
@@ -176,12 +236,38 @@ def _insert(tkeys, tvals, tused, tstamp, tcost,
         tvals = tvals.at[sel].set(jnp.where(do_w, vals[src], tvals[sel]))
         tcost = tcost.at[sel].set(jnp.where(do_w, costs[src], tcost[sel]))
         tstamp = tstamp.at[sel].set(jnp.where(do_w, tick, tstamp[sel]))
+        if pay is not None:
+            tpoff = tpoff.at[sel].set(jnp.where(do_w, poff[src],
+                                                tpoff[sel]))
+            tplen = tplen.at[sel].set(jnp.where(do_w, plen[src],
+                                                tplen[sel]))
         tused = tused.at[sel].set(tused[sel] | do_w)
         won = admit & (winner[sets] == rows)
         n_admit = n_admit + jnp.sum(won.astype(jnp.int32))
-        n_evict = n_evict + jnp.sum((won & ~any_free).astype(jnp.int32))
+        n_evict = n_evict + jnp.sum(
+            (won & ~any_free & ~has_res).astype(jnp.int32))
         remaining = rem & ~won
+    if pay is not None:
+        return (tkeys, tvals, tused, tstamp, tcost, tpoff, tplen,
+                n_admit, n_evict)
     return tkeys, tvals, tused, tstamp, tcost, n_admit, n_evict
+
+
+@jax.jit
+def _probe_payload(tkeys, tused, tstamp, tpoff, tplen, keys, active, tick):
+    """Evaluation-mode lookup: a hit additionally requires a resident row
+    block (``pay_len >= 0``) — entries inserted count-only are misses here.
+    Returns (hit, poff, plen, stamp')."""
+    n_sets = tkeys.shape[0]
+    sets = _hash_sets(keys, n_sets)
+    match = (tused[sets] & (tkeys[sets] == keys[:, None])
+             & (tplen[sets] >= 0) & active[:, None])
+    hit = match.any(axis=1)
+    way = jnp.argmax(match, axis=1)
+    poff = jnp.where(hit, tpoff[sets, way], 0)
+    plen = jnp.where(hit, tplen[sets, way], 0)
+    stamp = tstamp.at[sets, way].max(jnp.where(hit, tick, -1))
+    return hit, poff, plen, stamp
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +287,20 @@ class DeviceCache:
     used: jnp.ndarray    # (S, W) bool
     stamp: jnp.ndarray   # (S, W) int32  — LRU clock (ticks)
     cost: jnp.ndarray    # (S, W) int64  — recomputation-cost proxy
+    # payload region (None unless config.cache_payloads) — DESIGN.md §2.6
+    pay_off: Optional[jnp.ndarray] = None  # (S, W) int32 — slab offset
+    pay_len: Optional[jnp.ndarray] = None  # (S, W) int32 — block rows; -1=none
+    slab: Optional[jnp.ndarray] = None     # (payload_rows+1, width) int32;
+    #                                        last row = masked-write scratch
+    slab_bump: int = 0                     # host-side arena bump pointer
+    payload_flushes: int = 0
+    payload_skips: int = 0                 # eligible blocks not stored
+    payload_throttled: int = 0             # folds skipped by the throttle
+    # host-visible evaluation-probe counters feeding the store throttle
+    # (maintained by the executor from its per-fold planning fetch — no
+    # extra device sync)
+    eval_probes_h: int = 0
+    eval_hits_h: int = 0
     tick: int = 0
     resizes: int = 0
     window_launches: int = 0
@@ -210,6 +310,7 @@ class DeviceCache:
     _acc_probes: object = 0
     _acc_inserts: object = 0
     _acc_evictions: object = 0
+    _acc_payload_hits: object = 0
     # sliding window consumed by the sizing controller
     _acc_window_hits: object = 0
     _acc_window_probes: object = 0
@@ -234,19 +335,28 @@ class DeviceCache:
     def evictions(self) -> int:
         return int(device_get(self._acc_evictions, "cache-stat"))
 
+    @property
+    def payload_hits(self) -> int:
+        return int(device_get(self._acc_payload_hits, "cache-stat"))
+
     @staticmethod
     def create(config: CacheConfig,
                slots: Optional[int] = None) -> "DeviceCache":
         n = config.initial_slots() if slots is None else int(slots)
         w = config.ways
         s = max(1, n // w)
+        pay_off = pay_len = None
+        if config.cache_payloads:
+            pay_off = jnp.zeros((s, w), jnp.int32)
+            pay_len = jnp.full((s, w), -1, jnp.int32)
         return DeviceCache(
             config=config,
             keys=jnp.zeros((s, w), jnp.int64),
             vals=jnp.zeros((s, w), jnp.int64),
             used=jnp.zeros((s, w), bool),
             stamp=jnp.zeros((s, w), jnp.int32),
-            cost=jnp.zeros((s, w), jnp.int64))
+            cost=jnp.zeros((s, w), jnp.int64),
+            pay_off=pay_off, pay_len=pay_len)
 
     # -- capacity ------------------------------------------------------
     @property
@@ -274,21 +384,133 @@ class DeviceCache:
         self._acc_window_hits = self._acc_window_hits + n_hit
         return hit, vals
 
+    def probe_payload(self, qkeys: jnp.ndarray, active: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Evaluation-mode lookup: hit only on entries with a resident row
+        block; returns (hit, slab offset, block length)."""
+        assert self.pay_off is not None, "cache_payloads is off"
+        self.tick += 1
+        hit, poff, plen, stamp = _probe_payload(
+            self.keys, self.used, self.stamp, self.pay_off, self.pay_len,
+            qkeys, active, jnp.int32(self.tick))
+        self.stamp = stamp
+        n_active = jnp.sum(active.astype(jnp.int64))
+        n_hit = jnp.sum(hit.astype(jnp.int64))
+        self._acc_probes = self._acc_probes + n_active
+        self._acc_hits = self._acc_hits + n_hit
+        self._acc_misses = self._acc_misses + (n_active - n_hit)
+        self._acc_payload_hits = self._acc_payload_hits + n_hit
+        self._acc_window_probes = self._acc_window_probes + n_active
+        self._acc_window_hits = self._acc_window_hits + n_hit
+        return hit, poff, plen
+
     def insert(self, qkeys: jnp.ndarray, vals: jnp.ndarray,
                active: jnp.ndarray,
-               costs: Optional[jnp.ndarray] = None) -> None:
+               costs: Optional[jnp.ndarray] = None,
+               poff: Optional[jnp.ndarray] = None,
+               plen: Optional[jnp.ndarray] = None) -> None:
         self.tick += 1
         if costs is None:  # default proxy: the count itself (clipped >= 1)
             costs = jnp.maximum(vals, 1)
-        out = _insert(self.keys, self.vals, self.used, self.stamp, self.cost,
-                      qkeys, vals, costs.astype(jnp.int64), active,
-                      jnp.int32(self.tick), policy=self.config.policy,
-                      rounds=min(self.config.ways, 8))
-        (self.keys, self.vals, self.used, self.stamp, self.cost,
-         n_ins, n_evict) = out
+        if self.pay_off is not None:
+            # payload tables carry the metadata planes through EVERY
+            # insert so evicting writes always overwrite them (count
+            # inserts carry the -1 sentinel — never a stale block)
+            C = qkeys.shape[0]
+            if poff is None:
+                poff = jnp.zeros((C,), jnp.int32)
+                plen = jnp.full((C,), -1, jnp.int32)
+            out = _insert(
+                self.keys, self.vals, self.used, self.stamp, self.cost,
+                qkeys, vals, costs.astype(jnp.int64), active,
+                jnp.int32(self.tick), policy=self.config.policy,
+                rounds=min(self.config.ways, 8),
+                pay=(self.pay_off, self.pay_len, poff, plen))
+            (self.keys, self.vals, self.used, self.stamp, self.cost,
+             self.pay_off, self.pay_len, n_ins, n_evict) = out
+        else:
+            out = _insert(self.keys, self.vals, self.used, self.stamp,
+                          self.cost, qkeys, vals, costs.astype(jnp.int64),
+                          active, jnp.int32(self.tick),
+                          policy=self.config.policy,
+                          rounds=min(self.config.ways, 8))
+            (self.keys, self.vals, self.used, self.stamp, self.cost,
+             n_ins, n_evict) = out
         self._acc_inserts = self._acc_inserts + n_ins
         self._acc_evictions = self._acc_evictions + n_evict
         self.window_launches += 1
+
+    # -- payload slab arena (DESIGN.md §2.6) ---------------------------
+    def ensure_slab(self, width: int) -> None:
+        """Lazily allocate the block arena: ``payload_rows`` rows of the
+        node's subtree width, plus one scratch row for masked writes."""
+        if self.slab is None:
+            self.slab = jnp.zeros((int(self.config.payload_rows) + 1, width),
+                                  jnp.int32)
+        elif self.slab.shape[1] != width:
+            raise ValueError(
+                f"slab width {self.slab.shape[1]} != subtree width {width}")
+
+    def alloc_blocks(self, lens: np.ndarray, active: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side bump allocation of one batch of variable-length blocks.
+
+        ``lens[i]`` rows are requested for candidate row ``i`` (``active``
+        masks real candidates).  Blocks larger than the whole arena are
+        refused outright (they could never fit, and must not trigger a
+        pointless flush or veto later candidates).  If the rest of the
+        batch does not fit the remaining arena, the arena is *flushed*
+        first (every payload invalidated — keys/counts stay resident;
+        after a flush at least the first candidate is guaranteed to
+        admit); candidates still beyond capacity are refused prefix-wise.
+        Returns ``(offsets, admitted)`` (numpy, host) — refusals only
+        cost future recomputation.
+        """
+        cap = int(self.config.payload_rows)
+        lens = np.where(active, np.asarray(lens, np.int64), 0)
+        lens = np.where(lens <= cap, lens, 0)  # can never fit: refuse
+        total = int(lens.sum())
+        if total > cap - self.slab_bump and self.slab_bump > 0 and total:
+            self.flush_payloads()
+        cum = np.cumsum(lens)
+        admit = (lens > 0) & (cum <= cap - self.slab_bump)
+        offs = np.where(admit, self.slab_bump + cum - lens, 0).astype(
+            np.int32)
+        if admit.any():
+            self.slab_bump += int(lens[admit].sum())
+        return offs, admit
+
+    def note_eval_probes(self, probes: int, hits: int) -> None:
+        """Feed the store throttle (host counters, no device sync).  The
+        counters decay exponentially past 4× the probe floor — a sliding
+        window, so a miss-heavy prefix cannot latch the throttle against
+        a workload that later starts recurring."""
+        self.eval_probes_h += int(probes)
+        self.eval_hits_h += int(hits)
+        if self.eval_probes_h > 4 * self.config.payload_throttle_probes:
+            self.eval_probes_h //= 2
+            self.eval_hits_h //= 2
+
+    def store_throttled(self) -> bool:
+        """Admission throttle: True once this table has seen many
+        evaluation probes at a negligible payload hit rate — storing more
+        blocks is then pure overhead (keys don't recur here).  The rate
+        is re-checked every call over the decayed window, and the
+        executor still stores on an occasional probation fold, so a
+        workload shift re-opens storage."""
+        cfg = self.config
+        return (self.eval_probes_h >= cfg.payload_throttle_probes
+                and self.eval_hits_h
+                < cfg.payload_throttle_hit_rate * self.eval_probes_h)
+
+    def flush_payloads(self) -> None:
+        """Epoch reset of the arena: every payload pointer is invalidated
+        (keys and counts stay — count-mode hits are unaffected) and the
+        bump pointer rewinds.  Reclaims blocks orphaned by key eviction."""
+        if self.pay_len is not None:
+            self.pay_len = jnp.full_like(self.pay_len, -1)
+        self.slab_bump = 0
+        self.payload_flushes += 1
 
     # -- dynamic sizing (the paper's flexible-cache knob) --------------
     def maybe_resize(self, headroom: Optional[int] = None) -> int:
@@ -332,29 +554,51 @@ class DeviceCache:
         old_vals = self.vals.reshape(-1)
         old_cost = self.cost.reshape(-1)
         old_used = self.used.reshape(-1)
+        has_pay = self.pay_off is not None
+        if has_pay:
+            old_poff = self.pay_off.reshape(-1)
+            old_plen = self.pay_len.reshape(-1)
         fresh = DeviceCache.create(self.config, new_slots)
         self.keys, self.vals, self.used, self.stamp, self.cost = (
             fresh.keys, fresh.vals, fresh.used, fresh.stamp, fresh.cost)
+        self.pay_off, self.pay_len = fresh.pay_off, fresh.pay_len
+        # the slab and its bump pointer survive a resize: offsets stored in
+        # the re-inserted metadata still point at live arena rows
         if not bool(device_get(old_used.any(), "cache-rehash")):
             return
         # re-insert resident entries in one batched op; rehash collisions
         # drop entries, which only costs future recomputation (optionality)
         self.tick += 1
-        out = _insert(self.keys, self.vals, self.used, self.stamp, self.cost,
-                      old_keys, old_vals, old_cost, old_used,
-                      jnp.int32(self.tick), policy=self.config.policy,
-                      rounds=min(self.config.ways, 8))
-        self.keys, self.vals, self.used, self.stamp, self.cost = out[:5]
+        if has_pay:
+            out = _insert(
+                self.keys, self.vals, self.used, self.stamp, self.cost,
+                old_keys, old_vals, old_cost, old_used,
+                jnp.int32(self.tick), policy=self.config.policy,
+                rounds=min(self.config.ways, 8),
+                pay=(self.pay_off, self.pay_len, old_poff, old_plen))
+            (self.keys, self.vals, self.used, self.stamp, self.cost,
+             self.pay_off, self.pay_len) = out[:7]
+        else:
+            out = _insert(self.keys, self.vals, self.used, self.stamp,
+                          self.cost, old_keys, old_vals, old_cost, old_used,
+                          jnp.int32(self.tick), policy=self.config.policy,
+                          rounds=min(self.config.ways, 8))
+            self.keys, self.vals, self.used, self.stamp, self.cost = out[:5]
 
     def stats(self) -> Dict[str, int]:
         acc = device_get(
             {"hits": self._acc_hits, "misses": self._acc_misses,
              "probes": self._acc_probes, "inserts": self._acc_inserts,
              "evictions": self._acc_evictions,
+             "payload_hits": self._acc_payload_hits,
              "occupancy": jnp.sum(self.used)}, "cache-stats")
         out = {k: int(v) for k, v in acc.items()}
         out["resizes"] = self.resizes
         out["slots"] = self.n_slots
+        out["payload_flushes"] = self.payload_flushes
+        out["payload_skips"] = self.payload_skips
+        out["payload_throttled"] = self.payload_throttled
+        out["slab_rows"] = self.slab_bump
         return out
 
 
@@ -408,8 +652,10 @@ class CacheManager:
 
     def stats(self) -> Dict[str, int]:
         agg = {"hits": 0, "misses": 0, "probes": 0, "inserts": 0,
-               "evictions": 0, "resizes": 0, "slots": 0, "occupancy": 0}
+               "evictions": 0, "resizes": 0, "slots": 0, "occupancy": 0,
+               "payload_hits": 0, "payload_flushes": 0, "payload_skips": 0,
+               "payload_throttled": 0, "slab_rows": 0}
         for t in self.tables.values():
             for k, val in t.stats().items():
-                agg[k] += val
+                agg[k] = agg.get(k, 0) + val
         return agg

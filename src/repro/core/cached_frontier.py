@@ -26,7 +26,10 @@ data plane — the :class:`~.schedule.ScheduleExecutor` interprets the ops,
 with both memoization tiers as executor capabilities.  ``evaluate()`` runs
 the same schedule in materialization mode: tier-1 representatives are
 replayed as row blocks through ``orig`` (the paper §3.4's factorized
-intermediates), so the JAX engine now answers full-evaluation workloads.
+intermediates), so the JAX engine now answers full-evaluation workloads —
+and with ``CacheConfig(cache_payloads=True)`` tier 2 serves evaluation as
+well, replaying cached factorized row blocks from the per-node slab arena
+on every recurring adhesion key (DESIGN.md §2.6).
 """
 from __future__ import annotations
 
@@ -113,7 +116,9 @@ class JaxCachedTrieJoin(JaxTrieJoin):
                       "tier2_misses": 0, "tier2_probes": 0,
                       "tier2_inserts": 0, "tier2_evictions": 0,
                       "tier2_resizes": 0, "tier2_slots": 0,
-                      "subtree_launches": 0}
+                      "tier2_replay_hits": 0, "tier2_payload_flushes": 0,
+                      "tier2_payload_skips": 0, "tier2_payload_throttled": 0,
+                      "tier2_slab_rows": 0, "subtree_launches": 0}
 
     @property
     def cache_slots(self) -> int:
@@ -144,6 +149,12 @@ class JaxCachedTrieJoin(JaxTrieJoin):
         self.stats["tier2_evictions"] = agg["evictions"]
         self.stats["tier2_resizes"] = agg["resizes"]
         self.stats["tier2_slots"] = agg["slots"]
+        self.stats["tier2_replay_hits"] = agg.get("payload_hits", 0)
+        self.stats["tier2_payload_flushes"] = agg.get("payload_flushes", 0)
+        self.stats["tier2_payload_skips"] = agg.get("payload_skips", 0)
+        self.stats["tier2_payload_throttled"] = agg.get(
+            "payload_throttled", 0)
+        self.stats["tier2_slab_rows"] = agg.get("slab_rows", 0)
         self.stats["tier1_rows_collapsed"] += ex.t1_rows_collapsed()
         self.stats["subtree_launches"] += ex.subtree_launches
 
@@ -160,9 +171,15 @@ class JaxCachedTrieJoin(JaxTrieJoin):
         """Yields (k, n) int32 blocks of result assignments (order cols).
 
         Materialization mode of the same schedule: tier-1 representatives
-        are replayed back through ``orig`` at every FOLD; tier-2 count
-        tables cannot replay tuples and are bypassed (optionality — the
-        cache is never required for correctness)."""
+        are replayed back through ``orig`` at every FOLD.  With
+        ``cache=CacheConfig(cache_payloads=True)`` tier 2 participates
+        too: recurring adhesion keys replay their cached factorized row
+        blocks instead of re-expanding the bag (paper §3.4's evaluation
+        discussion; ``stats["tier2_replay_hits"]`` counts the parent rows
+        whose bag was served by splice — each such hit expands to its
+        block's ``pay_len`` result rows).
+        Count-only tables cannot replay tuples and are bypassed
+        (optionality — the cache is never required for correctness)."""
         with enable_x64():
             ex = ScheduleExecutor(self, mode="evaluate")
             self.last_executor = ex

@@ -114,6 +114,15 @@ def lollipop_query(clique_size: int = 3, tail_len: int = 2,
     return CQ(tuple(atoms))
 
 
+def bowtie_query(relation: str = "E") -> CQ:
+    """Bowtie: two triangles sharing the hub x1 — a TD with two recurring
+    bags keyed on the same hub variable (the evaluation-mode row-block
+    cache's clique-style workload)."""
+    return CQ((Atom(relation, ("x1", "x2")), Atom(relation, ("x2", "x3")),
+               Atom(relation, ("x1", "x3")), Atom(relation, ("x1", "x4")),
+               Atom(relation, ("x4", "x5")), Atom(relation, ("x1", "x5"))))
+
+
 def star_query(rays: int, relation: str = "E") -> CQ:
     """k-star: E(x1,x2), E(x1,x3), ..., E(x1,x{k+1}) — hub x1, k rays.
 

@@ -47,6 +47,14 @@ class Result:
     compile_s: float = 0.0  # jit trace / lowering / XLA backend compile
     exec_s: float = 0.0     # actual engine execution
 
+    @property
+    def tier2_replay_hits(self) -> int:
+        """Evaluation-mode tier-2 hits served by row-block replay: parent
+        rows whose bag subtree was spliced from the payload slab instead
+        of re-expanded (each expands to its block's rows); 0 unless the
+        JAX engine ran with ``cache_payloads=True``."""
+        return int(self.counters.get("tier2_replay_hits", 0))
+
 
 # -- compile-time accounting (jax.monitoring duration events) --------------
 
@@ -174,7 +182,10 @@ def evaluate(q: CQ, db: Database, algorithm: str = "clftj",
              cache: Optional[CacheConfig] = None) -> Result:
     """Materialize ``q``'s full result.  ``backend="jax"`` runs the
     schedule executor in evaluation mode (tier-1 representatives replayed
-    as row blocks); tuples are identical to the host oracle's."""
+    as row blocks); tuples are identical to the host oracle's.  With
+    ``cache=CacheConfig(cache_payloads=True)`` tier 2 serves evaluation
+    too — recurring subjoins splice their cached factorized blocks
+    instead of re-expanding (``Result.tier2_replay_hits``)."""
     t0 = time.perf_counter()
     counters = Counters()
     td, order = _plan(q, db, td, order)

@@ -13,7 +13,10 @@ per launch (each morsel is one fixed-shape chunk); the executor holds a
 level's morsels on the host side of the schedule pass, so host/heap use
 scales with the widest frontier level — and evaluation mode buffers
 emitted ``(assign, valid)`` blocks until the pass completes (streaming
-them is the ROADMAP's "async emit" follow-on).
+them is the ROADMAP's "async emit" follow-on).  A frontier row spliced
+from the tier-2 payload slab (cached-subtree replay, DESIGN.md §2.6) is
+indistinguishable downstream from one produced by expansion — the cache
+only ever substitutes for recomputation.
 
 Execution goes through the shared instruction schedule (DESIGN.md §2.5):
 this class owns the *data plane* (tries, guard selection, the jitted

@@ -9,6 +9,7 @@ admission checks so the count is O(ops), not O(chunks).
 """
 from __future__ import annotations
 
+from collections import Counter
 from typing import Any, List
 
 import jax
@@ -21,12 +22,16 @@ class SyncCounter:
 
     ``count`` is the number of :func:`device_get` calls (each call may fetch
     a whole pytree — that is the point: one batched fetch per op, not one
-    per chunk).  ``events`` records the labels, for diagnosing regressions.
+    per chunk).  ``events`` records the labels, for diagnosing regressions;
+    ``label_counts`` is the same information aggregated, so budget tests
+    can pin one label's frequency (e.g. the evaluation-mode payload plan
+    must ride the per-fold ``replay-plan`` fetch: O(ops), not O(hits)).
     """
 
     def __init__(self) -> None:
         self.count = 0
         self.events: List[str] = []
+        self.label_counts: Counter = Counter()
 
     def __enter__(self) -> "SyncCounter":
         _active.append(self)
@@ -42,4 +47,5 @@ def device_get(tree: Any, label: str = "") -> Any:
     for c in _active:
         c.count += 1
         c.events.append(label)
+        c.label_counts[label] += 1
     return jax.device_get(tree)

@@ -15,7 +15,9 @@ instruction schedule* over four ops:
                            factor multiplication (count mode) or replay of
                            representative row blocks through ``orig``
                            (evaluate mode — the paper §3.4's factorized
-                           intermediates, materialized)
+                           intermediates, materialized; with
+                           ``cache_payloads`` the blocks are also stored
+                           in / spliced from the tier-2 slab arena)
   * ``EMIT``             — accumulate counts / yield result tuples
 
 The TD recursion is flattened at lowering time: a subtree's ops are *data*
@@ -276,6 +278,66 @@ def _replay_step(P, active, rep_of_row, E, *, d0: int, d1: int):
     return type(out)(*(x[perm] for x in out)), needed
 
 
+@functools.partial(jax.jit, static_argnames=("d0", "d1"))
+def _store_blocks(slab, E, poff, admit, *, d0: int, d1: int):
+    """Write one exit chunk's per-representative row blocks into the slab
+    arena (tier-2 payload insert, evaluation mode).
+
+    Exit rows are sorted by representative id exactly as in
+    :func:`_replay_step`; rep *r*'s rows land contiguously at ``poff[r]``.
+    Refused or invalid rows are routed to the arena's scratch row (the
+    last one) — a masked ``.set`` must never target a live slot, or a
+    "keep old value" no-op could land after a real write and clobber it.
+    """
+    C = E.assign.shape[0]
+    R = slab.shape[0] - 1  # last row = scratch
+    ecnt = jnp.zeros((C,), jnp.int32).at[
+        jnp.clip(E.orig, 0, C - 1)].add(E.valid.astype(jnp.int32))
+    ekey = jnp.where(E.valid, jnp.clip(E.orig, 0, C - 1), jnp.int32(C))
+    eorder = jnp.argsort(ekey, stable=True)
+    estart = jnp.cumsum(ecnt) - ecnt
+    j = jnp.arange(C, dtype=jnp.int32)
+    rep = jnp.clip(E.orig[eorder], 0, C - 1)
+    ok = E.valid[eorder] & admit[rep]
+    dest = jnp.where(ok, jnp.clip(poff[rep] + (j - estart[rep]), 0, R - 1),
+                     R)
+    rows = E.assign[eorder, d0:d1 + 1]
+    return slab.at[dest].set(jnp.where(ok[:, None], rows, slab[dest]))
+
+
+@functools.partial(jax.jit, static_argnames=("d0", "d1"))
+def _splice_step(P, mask, poff, plen, slab, *, d0: int, d1: int):
+    """:func:`_replay_step` specialized to slab-resident blocks (splice).
+
+    For every masked parent row *i* with a tier-2 payload hit, emit
+    ``plen[i]`` continuation rows: the parent's assignment with the
+    subtree columns ``[d0, d1]`` gathered from its cached factorized
+    block — the same (parent, exit)-pair enumeration as the replay step,
+    with the exit chunk replaced by slab rows (blocks are stored
+    contiguously, so no per-rep sort is needed).  Caller guarantees the
+    masked total fits the chunk capacity (pre-packed morsel mask).
+    """
+    C = P.assign.shape[0]
+    R = slab.shape[0] - 1
+    pcnt = jnp.where(mask, plen, 0).astype(jnp.int32)
+    offsets = jnp.cumsum(pcnt) - pcnt
+    needed = offsets[-1] + pcnt[-1]
+    slot = jnp.arange(C, dtype=jnp.int32)
+    src = jnp.clip(jnp.searchsorted(offsets, slot, side="right") - 1, 0, C - 1)
+    delta = slot - offsets[src]
+    ok = (slot < needed) & (delta < pcnt[src])
+    sidx = jnp.where(ok, jnp.clip(poff[src] + delta, 0, R - 1), R)
+    sub = slab[sidx]                                   # (C, d1-d0+1)
+    assign = P.assign[src].at[:, d0:d1 + 1].set(sub)
+    out = P._replace(assign=assign,
+                     factor=P.factor[src],
+                     valid=ok,
+                     orig=P.orig[src],
+                     lo=P.lo[src], hi=P.hi[src])
+    perm = jnp.argsort(jnp.logical_not(out.valid), stable=True)
+    return type(out)(*(x[perm] for x in out))
+
+
 # ---------------------------------------------------------------------------
 # Host-driven executor
 # ---------------------------------------------------------------------------
@@ -294,6 +356,9 @@ class _Frame:
     n_reps: Optional[jnp.ndarray]
     use_t1: bool
     use_t2: bool
+    # evaluation-mode tier-2: per-row payload pointers of the probe hits
+    poff: Optional[jnp.ndarray] = None
+    plen: Optional[jnp.ndarray] = None
 
 
 @dataclass
@@ -334,9 +399,13 @@ class ScheduleExecutor:
 
     ``mode="count"`` multiplies subtree counts into factors (tier 1 + 2);
     ``mode="evaluate"`` materializes tuples: FOLD replays representative
-    row blocks through ``orig`` (tier-2 count tables are unusable for
-    materialization and are bypassed — caching stays an optimization,
-    never a correctness requirement).
+    row blocks through ``orig``.  With ``cache_payloads`` on, evaluation
+    also uses tier 2: ENTER probes the payload table, hit rows skip the
+    bag entirely, and FOLD splices their cached factorized blocks back
+    through the same jitted replay step while storing the miss
+    representatives' fresh blocks (DESIGN.md §2.6).  Count-only tables
+    are still bypassed — caching stays an optimization, never a
+    correctness requirement.
     """
 
     def __init__(self, engine, mode: str = "count"):
@@ -462,12 +531,22 @@ class ScheduleExecutor:
     # -- ENTER_CHILD (one parent chunk) --------------------------------
     def _enter_one(self, F, op: Op) -> Tuple[_Frame, Any]:
         C = self.engine.capacity
-        use_t2 = (op.probe and self.mode == "count"
-                  and self.cache is not None and self.cache.enabled)
+        cache_on = self.cache is not None and self.cache.enabled
+        # evaluation mode probes tier 2 only when row-block payloads are
+        # on: count tables cannot replay tuples (the PR-2 bypass)
+        use_t2 = op.probe and cache_on and (
+            self.mode == "count" or self.cache.config.cache_payloads)
         use_t1 = op.dedup and self.dedup
         keys = (_pack_keys(F.assign, op.adhesion, op.node)
                 if (op.probe or op.dedup) else None)
-        if use_t2:
+        poff = plen = None
+        if use_t2 and self.mode == "evaluate":
+            # a payload hit means: splice the cached factorized block at
+            # FOLD instead of descending into the bag for this row
+            hit, poff, plen = self.cache.get(op.node).probe_payload(
+                keys, F.valid)
+            hvals = jnp.zeros((C,), jnp.int64)
+        elif use_t2:
             hit, hvals = self.cache.get(op.node).probe(keys, F.valid)
         else:
             hit = jnp.zeros((C,), bool)
@@ -485,7 +564,8 @@ class ScheduleExecutor:
         self.subtree_launches += 1
         return _Frame(F=F, keys=keys, hit=hit, hvals=hvals,
                       rep_of_row=rep_of_row, first_idx=first_idx,
-                      n_reps=n_reps, use_t1=use_t1, use_t2=use_t2), R
+                      n_reps=n_reps, use_t1=use_t1, use_t2=use_t2,
+                      poff=poff, plen=plen), R
 
     # -- FOLD_CHILD (one parent chunk's subtree exits) -----------------
     def _fold_one(self, fr: _Frame, exits: List[Any], op: Op) -> List[Any]:
@@ -511,26 +591,162 @@ class ScheduleExecutor:
 
     def _fold_one_evaluate(self, fr: _Frame, exits: List[Any],
                            op: Op) -> List[Any]:
-        if not exits:
+        use_pay = fr.use_t2
+        if not exits and not use_pay:
             return []
         C = self.engine.capacity
-        # one planning fetch per fold: exit orig/valid + the parent rep map
-        exits_h, (ror_h, active_h) = device_get(
-            ([(E.orig, E.valid) for E in exits],
-             (fr.rep_of_row, fr.F.valid & ~fr.hit)), "replay-plan")
+        # ONE planning fetch per fold: exit orig/valid, the parent rep map,
+        # and (payload mode) the probe's hit mask + block lengths — the
+        # payload plan rides the same batched device_get, O(ops) syncs
+        plan = ([(E.orig, E.valid) for E in exits],
+                (fr.rep_of_row, fr.F.valid & ~fr.hit))
+        keys_h = None
+        if use_pay:
+            # with tier-1 dedup off, every parent row is its own rep —
+            # the store path needs the key values to collapse duplicates,
+            # so they ride the same fetch (still one sync per fold)
+            extra = ((fr.hit, fr.plen) if fr.use_t1
+                     else (fr.hit, fr.plen, fr.keys))
+            exits_h, (ror_h, active_h), extra_h = device_get(
+                plan + (extra,), "replay-plan")
+            hit_h, plen_h = extra_h[0], extra_h[1]
+            if not fr.use_t1:
+                keys_h = extra_h[2]
+        else:
+            exits_h, (ror_h, active_h) = device_get(plan, "replay-plan")
         active_dev = fr.F.valid & ~fr.hit
         out: List[Any] = []
+        ecnts: List[np.ndarray] = []
         for E, (eorig, evalid) in zip(exits, exits_h):
             ecnt = np.zeros(C, np.int64)
             np.add.at(ecnt, np.clip(eorig, 0, C - 1),
                       evalid.astype(np.int64))
+            ecnts.append(ecnt)
             pcnt = np.where(active_h, ecnt[np.clip(ror_h, 0, C - 1)], 0)
             for mask in _pack_parent_morsels(pcnt, C):
                 cont, _ = _replay_step(fr.F, active_dev & jnp.asarray(mask),
                                        fr.rep_of_row, E,
                                        d0=op.sub_first, d1=op.sub_last)
                 out.append(cont)
+        if use_pay:
+            tbl = self.cache.get(op.node)
+            if hit_h.any():
+                # splice FIRST: hit parents never descended into the bag —
+                # their cached factorized blocks re-expand through the
+                # replay step specialized to slab sources.  The probe's
+                # (poff, plen) pointers are only guaranteed until this
+                # table's next insert (which may epoch-flush and reuse the
+                # arena rows), so the splice must precede the insert below.
+                pcnt = np.where(hit_h, plen_h, 0).astype(np.int64)
+                for mask in _pack_parent_morsels(pcnt, C):
+                    out.append(_splice_step(
+                        fr.F, fr.hit & jnp.asarray(mask), fr.poff, fr.plen,
+                        tbl.slab, d0=op.sub_first, d1=op.sub_last))
+            # feed the admission throttle from the masks this fold already
+            # fetched (no extra sync): probes = hit + miss parent rows
+            n_hit = int(hit_h.sum())
+            tbl.note_eval_probes(n_hit + int(active_h.sum()), n_hit)
+            launches0 = tbl.window_launches
+            if exits:
+                probation = self.cache.config.payload_probation
+                if tbl.store_throttled():
+                    # keys don't recur on this table — stop paying the
+                    # arena-write overhead.  Every Nth throttled fold
+                    # still stores (probation): with nothing resident the
+                    # hit rate could never recover on a workload shift.
+                    tbl.payload_throttled += 1
+                    if probation and tbl.payload_throttled % probation == 0:
+                        self._insert_payload_blocks(fr, exits, ecnts,
+                                                    active_h, keys_h, op)
+                else:
+                    # store the miss representatives' blocks BEFORE the
+                    # next parent morsel probes (cross-morsel reuse, as in
+                    # count mode); complete blocks only — a rep whose exit
+                    # rows spread over several chunks would cache a
+                    # partial result
+                    self._insert_payload_blocks(fr, exits, ecnts,
+                                                active_h, keys_h, op)
+            # the sizing controller must keep running while the store
+            # throttle is engaged (its whole point is handing memory back
+            # on exactly these low-reuse tables) — its launch clock
+            # normally advances via insert(), so tick it for insert-less
+            # folds (throttled, or nothing eligible) before deciding
+            if tbl.window_launches == launches0:
+                tbl.window_launches = launches0 + 1
+            self.cache.maybe_resize(op.node)
         return out
+
+    def _insert_payload_blocks(self, fr: _Frame, exits: List[Any],
+                               ecnts: List[np.ndarray], active_h,
+                               keys_h: Optional[np.ndarray], op: Op
+                               ) -> None:
+        """Tier-2 payload insert at FOLD (evaluation mode): slab-write the
+        representatives' row blocks and admit their keys.
+
+        Morsel splitting partitions *rows* across exit chunks, so most
+        representatives' exits live entirely in one chunk; a block is
+        admitted from chunk *j* exactly when all of its rep's exit rows
+        are in chunk *j* (``ecnt_j == total``).  Reps genuinely spread
+        over chunks (oversized-row splits, nested-subtree morsels) would
+        cache a *partial* — hence wrong — result and are skipped, which
+        only costs recomputation (optionality)."""
+        tbl = self.cache.get(op.node)
+        C = self.engine.capacity
+        total = ecnts[0] if len(ecnts) == 1 else np.sum(ecnts, axis=0)
+        if fr.use_t1:
+            # valid reps are exactly the rows ecnt can be nonzero at
+            rep_keys = fr.keys[jnp.clip(fr.first_idx, 0, C - 1)]
+            eligible = total > 0
+        else:
+            rep_keys = fr.keys
+            eligible = (total > 0) & active_h
+            if keys_h is not None:
+                # dedup off: duplicate adhesion keys each carry their own
+                # (identical) block, but only one copy per key can be
+                # admitted — keep the first, or the rest leak arena rows
+                big = np.int64(2 ** 62)
+                k = np.where(eligible, keys_h, big)
+                order = np.argsort(k, kind="stable")
+                ks = k[order]
+                isfirst = np.ones(ks.shape[0], bool)
+                isfirst[1:] = ks[1:] != ks[:-1]
+                isfirst &= ks != big
+                first = np.zeros_like(eligible)
+                first[order[isfirst]] = True
+                eligible &= first
+        stored = np.zeros(C, bool)
+        poff_all = np.zeros(C, np.int32)
+        flushes0 = tbl.payload_flushes
+        for E, ecnt in zip(exits, ecnts):
+            cand = eligible & (ecnt == total)
+            if not cand.any():
+                continue  # empty subtrees are not cached (no negatives)
+            tbl.ensure_slab(op.sub_last - op.sub_first + 1)
+            poff_np, admit_np = tbl.alloc_blocks(ecnt, cand)
+            if tbl.payload_flushes != flushes0:
+                # an epoch flush rewound the arena mid-fold: offsets
+                # accumulated from earlier chunks may now be overwritten —
+                # drop them from the batched admission (recompute later)
+                stored[:] = False
+                flushes0 = tbl.payload_flushes
+            if not admit_np.any():
+                continue
+            tbl.slab = _store_blocks(tbl.slab, E, jnp.asarray(poff_np),
+                                     jnp.asarray(admit_np),
+                                     d0=op.sub_first, d1=op.sub_last)
+            poff_all = np.where(admit_np, poff_np, poff_all)
+            stored |= admit_np
+        if stored.any():
+            # one batched key admission for the whole fold (a rep is
+            # complete in at most one chunk, so the admit sets are
+            # disjoint); vals = block length = the exact subtree count
+            # (factors are all 1 in evaluation mode), so count() can
+            # reuse the entries
+            lens = jnp.asarray(total)
+            tbl.insert(rep_keys, lens, jnp.asarray(stored),
+                       poff=jnp.asarray(poff_all),
+                       plen=lens.astype(jnp.int32))
+        tbl.payload_skips += int((eligible & ~stored).sum())
 
     # -- EMIT ----------------------------------------------------------
     def _op_emit(self, chunks) -> None:

@@ -7,18 +7,23 @@ identical counts and identical tuple *sets* (Veldhuizen's LFTJ and Free
 Join both validate optimized engines against reference executions; this is
 that discipline made a fixture).  The JAX CLFTJ additionally runs under
 every tier-2 cache policy: by the paper's optionality property, no policy
-may change any answer."""
+may change any answer.
+
+The *randomized zoo* extends the corpus with seeded generators — 4-clique,
+5-cycle, bowtie, random acyclic CQs — over Zipf-skewed databases (skew is
+what makes adhesion keys recur, so it is exactly the regime where the
+evaluation-mode row-block cache must prove it never changes a tuple)."""
 import numpy as np
 import pytest
 
-from repro.core import (CacheConfig, choose_plan, clftj_count,
-                        clftj_evaluate, cycle_query, lftj_count,
-                        lftj_evaluate, path_query, star_query, ytd_count,
-                        ytd_evaluate)
+from repro.core import (Atom, CQ, CacheConfig, bowtie_query, choose_plan,
+                        clftj_count, clftj_evaluate, clique_query,
+                        cycle_query, lftj_count, lftj_evaluate, path_query,
+                        star_query, ytd_count, ytd_evaluate)
 from repro.core import engine
 from repro.core.bruteforce import brute_force_evaluate
 from repro.core.cached_frontier import JaxCachedTrieJoin, jax_clftj_evaluate
-from repro.core.db import graph_db
+from repro.core.db import Database, graph_db
 from repro.core.frontier import jax_lftj_count, jax_lftj_evaluate
 
 SEED = 1729
@@ -44,6 +49,62 @@ CACHE_POLICIES = [
 ]
 
 
+# ---------------------------------------------------------------------------
+# Randomized zoo: seeded CQ generators + Zipf-skewed databases
+# ---------------------------------------------------------------------------
+
+def random_acyclic_query(k: int, seed: int) -> CQ:
+    """Seeded random acyclic CQ: a uniform random tree over x1..xk, each
+    edge a binary E-atom with coin-flipped direction."""
+    rng = np.random.default_rng(seed)
+    atoms = []
+    for i in range(2, k + 1):
+        j = int(rng.integers(1, i))
+        pair = (f"x{j}", f"x{i}") if rng.random() < 0.5 else (f"x{i}", f"x{j}")
+        atoms.append(Atom("E", pair))
+    return CQ(tuple(atoms))
+
+
+def zipf_graph_db(nv: int, ne: int, a: float, seed: int) -> Database:
+    """Graph with Zipf-distributed endpoint popularity (hot vertices make
+    adhesion keys recur — the row-block cache's target regime)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, nv + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    p /= p.sum()
+    edges = np.stack([rng.choice(nv, size=ne, p=p),
+                      rng.choice(nv, size=ne, p=p)], axis=1)
+    return graph_db(edges)
+
+
+ZOO = [
+    ("4-clique", clique_query(4)),
+    ("5-cycle", cycle_query(5)),
+    ("bowtie", bowtie_query()),
+    ("rand-acyclic-5", random_acyclic_query(5, seed=11)),
+    ("rand-acyclic-6", random_acyclic_query(6, seed=23)),
+    ("rand-acyclic-7", random_acyclic_query(7, seed=47)),
+]
+
+# every policy, with the row-block payload region on — plus a deliberately
+# tiny slab (forced epoch flushes + prefix refusals) and payloads off
+ZOO_CACHES = [
+    ("off", None),
+    ("direct-pay", CacheConfig(policy="direct", slots=128,
+                               cache_payloads=True, payload_rows=1 << 12)),
+    ("assoc4-pay", CacheConfig(policy="setassoc", slots=128, assoc=4,
+                               cache_payloads=True, payload_rows=1 << 12)),
+    ("cost4-pay", CacheConfig(policy="costaware", slots=128, assoc=4,
+                              cache_payloads=True, payload_rows=1 << 12)),
+    ("adaptive-pay", CacheConfig(policy="setassoc", slots=32, assoc=4,
+                                 dynamic=True, budget=512, min_slots=16,
+                                 resize_interval=2, cache_payloads=True,
+                                 payload_rows=1 << 12)),
+    ("tiny-slab", CacheConfig(policy="setassoc", slots=128, assoc=4,
+                              cache_payloads=True, payload_rows=24)),
+]
+
+
 @pytest.fixture(scope="module")
 def corpus_dbs():
     rng = np.random.default_rng(SEED)
@@ -53,12 +114,19 @@ def corpus_dbs():
     return out[:N_DBS]
 
 
+@pytest.fixture(scope="module")
+def zoo_dbs():
+    return [zipf_graph_db(12, 60, 1.1, seed=SEED + 1),
+            zipf_graph_db(18, 90, 0.9, seed=SEED + 2)]
+
+
 def _tuple_set(rows, order, variables):
     """Rows over `order` columns → set of tuples in q.variables order."""
     idx = [list(order).index(x) for x in variables]
     return {tuple(int(t[i]) for i in idx) for t in rows}
 
 
+@pytest.mark.tier1
 @pytest.mark.parametrize("qname,q", CORPUS, ids=[n for n, _ in CORPUS])
 def test_counts_identical_across_engines(corpus_dbs, qname, q):
     for db in corpus_dbs:
@@ -75,6 +143,7 @@ def test_counts_identical_across_engines(corpus_dbs, qname, q):
         assert got == {k: want for k in got}, f"{qname}: {got} != {want}"
 
 
+@pytest.mark.tier1
 @pytest.mark.parametrize("qname,q", CORPUS, ids=[n for n, _ in CORPUS])
 def test_tuple_sets_identical_across_engines(corpus_dbs, qname, q):
     for db in corpus_dbs[:2]:
@@ -92,6 +161,7 @@ def test_tuple_sets_identical_across_engines(corpus_dbs, qname, q):
         assert _tuple_set(jax_c_rows.tolist(), order, q.variables) == want
 
 
+@pytest.mark.tier1
 @pytest.mark.parametrize("cfg", CACHE_POLICIES,
                          ids=["direct", "assoc4", "cost4", "adaptive"])
 def test_jax_clftj_evaluate_tuple_sets_every_policy(corpus_dbs, cfg):
@@ -133,6 +203,7 @@ def test_engine_facade_evaluate_jax_backend(corpus_dbs):
         assert res_jax.wall_s >= res_jax.plan_s + res_jax.exec_s - 1e-6
 
 
+@pytest.mark.tier1
 @pytest.mark.parametrize("cfg", CACHE_POLICIES,
                          ids=["direct", "assoc4", "cost4", "adaptive"])
 def test_every_cache_policy_conforms(corpus_dbs, cfg):
@@ -146,6 +217,98 @@ def test_every_cache_policy_conforms(corpus_dbs, cfg):
         assert eng.count() == want, f"{qname} under {cfg.policy}"
         s = eng.stats
         assert s["tier2_hits"] + s["tier2_misses"] == s["tier2_probes"]
+
+
+# ---------------------------------------------------------------------------
+# Randomized zoo (evaluation-mode row-block caching)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("qname,q", ZOO, ids=[n for n, _ in ZOO])
+def test_zoo_tuple_sets_identical_across_engines(zoo_dbs, qname, q):
+    """Every engine in the repo over the randomized zoo: identical tuple
+    sets against brute force on Zipf-skewed databases."""
+    for db in zoo_dbs:
+        td, order = choose_plan(q, db.stats())
+        want = brute_force_evaluate(q, db)
+        assert _tuple_set(lftj_evaluate(q, order, db), order,
+                          q.variables) == want, qname
+        assert _tuple_set(clftj_evaluate(q, td, order, db), order,
+                          q.variables) == want, qname
+        assert {tuple(map(int, t))
+                for t in ytd_evaluate(q, td, db)} == want, qname
+        jax_rows = jax_lftj_evaluate(q, order, db, capacity=1 << 8)
+        assert _tuple_set(jax_rows.tolist(), order, q.variables) == want
+        jax_c_rows = jax_clftj_evaluate(q, td, order, db, capacity=1 << 8)
+        assert _tuple_set(jax_c_rows.tolist(), order, q.variables) == want
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("cname,cfg", ZOO_CACHES,
+                         ids=[n for n, _ in ZOO_CACHES])
+def test_zoo_evaluate_with_row_block_caching(zoo_dbs, cname, cfg):
+    """The zoo through JAX CLFTJ evaluation with row-block caching on and
+    off, under every policy (plus a slab small enough to force epoch
+    flushes): tuple sets must equal the host CLFTJ oracle, each exactly
+    once.  Each engine evaluates TWICE — the second pass replays from the
+    payload cache (tables persist per engine), so splice-on-hit itself is
+    what's being conformance-checked."""
+    db = zoo_dbs[0]
+    for qname, q in ZOO:
+        td, order = choose_plan(q, db.stats())
+        want = _tuple_set(clftj_evaluate(q, td, order, db), order,
+                          q.variables)
+        eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 8,
+                                cache=cfg)
+        for run in (1, 2):
+            blocks = list(eng.evaluate())
+            rows = (np.concatenate(blocks, axis=0) if blocks
+                    else np.zeros((0, len(order)), np.int32))
+            got = _tuple_set(rows.tolist(), order, q.variables)
+            assert got == want, f"{qname}/{cname} run {run}"
+            assert rows.shape[0] == len(got), \
+                f"{qname}/{cname} run {run}: duplicate rows"
+
+
+@pytest.mark.tier1
+def test_zoo_replay_hits_on_recurring_bags(zoo_dbs):
+    """On a recurring-bag query over a skewed DB, the second evaluation
+    pass of a shared engine must actually serve tier-2 replay hits (the
+    subsystem is on, not silently bypassed), and counts must line up:
+    replayed rows never exceed emitted rows' origin count."""
+    db = zoo_dbs[0]
+    q = bowtie_query()
+    td, order = choose_plan(q, db.stats())
+    cfg = CacheConfig(policy="setassoc", slots=256, assoc=4,
+                      cache_payloads=True, payload_rows=1 << 13)
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 8, cache=cfg)
+    n1 = sum(b.shape[0] for b in eng.evaluate())
+    assert eng.stats["tier2_slab_rows"] > 0, "no blocks were stored"
+    first_hits = eng.stats["tier2_replay_hits"]
+    n2 = sum(b.shape[0] for b in eng.evaluate())
+    assert n2 == n1
+    assert eng.stats["tier2_replay_hits"] > first_hits, \
+        "second pass did not replay from the payload cache"
+
+
+@pytest.mark.tier1
+def test_engine_facade_replay_hits_stat(zoo_dbs):
+    """Result.tier2_replay_hits surfaces the splice count through the
+    facade, and a payload run's tuples equal the cache-off run's."""
+    db = zoo_dbs[0]
+    q = bowtie_query()
+    cfg = CacheConfig(policy="setassoc", slots=256, assoc=4,
+                      cache_payloads=True, payload_rows=1 << 13)
+    res_off = engine.evaluate(q, db, algorithm="clftj", backend="jax",
+                              capacity=1 << 7)
+    res_on = engine.evaluate(q, db, algorithm="clftj", backend="jax",
+                             capacity=1 << 7, cache=cfg)
+    got_on = _tuple_set(res_on.tuples.tolist(), res_on.order, q.variables)
+    got_off = _tuple_set(res_off.tuples.tolist(), res_off.order,
+                         q.variables)
+    assert got_on == got_off and res_on.count == res_off.count
+    assert res_off.tier2_replay_hits == 0
+    assert res_on.counters["tier2_slab_rows"] > 0
 
 
 def test_conformance_under_tiny_capacity(corpus_dbs):

@@ -7,9 +7,10 @@ always execute (hypothesis is an optional dev dependency)."""
 import numpy as np
 import pytest
 
-from repro.core import (CachePolicy, choose_plan, clftj_count, lftj_count,
-                        ytd_count, cycle_query, path_query,
+from repro.core import (CacheConfig, CachePolicy, choose_plan, clftj_count,
+                        lftj_count, ytd_count, cycle_query, path_query,
                         random_graph_query)
+from repro.core import engine
 from repro.core.bruteforce import brute_force_count
 from repro.core.db import graph_db
 
@@ -50,6 +51,38 @@ def _assert_bounded_cache_invariant(db, q, cap: int):
     assert clftj_count(q, td, order, db, CachePolicy(capacity=cap)) == want
 
 
+# cache configs for the count == |evaluate| property: payloads off, every
+# payload-bearing policy, and a slab tiny enough to flush mid-query
+_EVAL_CACHES = [
+    None,
+    CacheConfig(policy="direct", slots=64, cache_payloads=True,
+                payload_rows=1 << 11),
+    CacheConfig(policy="setassoc", slots=64, assoc=4, cache_payloads=True,
+                payload_rows=1 << 11),
+    CacheConfig(policy="costaware", slots=64, assoc=4, cache_payloads=True,
+                payload_rows=16),
+]
+
+
+def _assert_count_equals_evaluate(db, q):
+    """engine.count(...) == len(engine.evaluate(...)) for every engine —
+    counting and materialization are the same semantics, whatever the
+    algorithm, backend, or tier-2 policy (row-block caching included)."""
+    for algorithm, backend in [("lftj", "ref"), ("clftj", "ref"),
+                               ("ytd", "ref"), ("lftj", "jax")]:
+        c = engine.count(q, db, algorithm=algorithm, backend=backend,
+                         capacity=1 << 9)
+        e = engine.evaluate(q, db, algorithm=algorithm, backend=backend,
+                            capacity=1 << 9)
+        assert c.count == len(e.tuples) == e.count, (algorithm, backend)
+    for cache in _EVAL_CACHES:
+        c = engine.count(q, db, algorithm="clftj", backend="jax",
+                         capacity=1 << 9, cache=cache)
+        e = engine.evaluate(q, db, algorithm="clftj", backend="jax",
+                            capacity=1 << 9, cache=cache)
+        assert c.count == len(e.tuples) == e.count, cache
+
+
 # -- deterministic corpus (always runs) ------------------------------------
 
 CORPUS = list(range(17, 17 + 12))
@@ -69,6 +102,15 @@ def test_corpus_bounded_cache_invariant(seed, cap):
     _assert_bounded_cache_invariant(db, q, cap)
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", CORPUS[:4])
+def test_corpus_count_equals_evaluate(seed):
+    """Deterministic fallback of the count == |evaluate| property — runs
+    even without hypothesis installed."""
+    db, q = _make_case(seed)
+    _assert_count_equals_evaluate(db, q)
+
+
 # -- hypothesis drivers (when installed) -----------------------------------
 
 if HAVE_HYPOTHESIS:
@@ -86,3 +128,10 @@ if HAVE_HYPOTHESIS:
     def test_bounded_cache_invariant(seed, cap):
         db, q = _make_case(seed)
         _assert_bounded_cache_invariant(db, q, cap)
+
+    @pytest.mark.slow
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10 ** 6))
+    def test_count_equals_evaluate(seed):
+        db, q = _make_case(seed)
+        _assert_count_equals_evaluate(db, q)

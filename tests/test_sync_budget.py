@@ -86,6 +86,29 @@ def test_evaluate_mode_sync_budget(db):
     assert sc.count <= _budget(eng), sc.events
 
 
+@pytest.mark.tier1
+def test_evaluate_payload_sync_budget(db):
+    """Row-block caching must not add syncs: the payload plan (hit mask +
+    block lengths) rides the per-fold ``replay-plan`` fetch — O(ops), not
+    O(hits) — and the slab writes/splices are pure device ops.  Checked on
+    a warm engine (second pass = replay-on-hit exercised end to end)."""
+    q = path_query(4)
+    td, order = choose_plan(q, db.stats())
+    eng = JaxCachedTrieJoin(
+        q, td, order, db, capacity=1 << 9,
+        cache=CacheConfig(policy="setassoc", slots=256, assoc=4,
+                          cache_payloads=True, payload_rows=1 << 14))
+    n1 = sum(b.shape[0] for b in eng.evaluate())  # cold: fills the slab
+    with SyncCounter() as sc:
+        n2 = sum(b.shape[0] for b in eng.evaluate())
+    assert n1 == n2 == lftj_count(q, order, db)
+    assert eng.stats["tier2_replay_hits"] > 0, "payload path not exercised"
+    r = eng.last_executor.op_runs
+    assert sc.count <= _budget(eng), sc.events
+    # payload fetches are batched per fold op, never per hit
+    assert sc.label_counts["replay-plan"] <= r["fold"], sc.label_counts
+
+
 def test_vanilla_lftj_sync_budget(db):
     q = path_query(3)
     order = sorted(q.variables)
