@@ -2,7 +2,15 @@
 # Tier-1 verify: the ROADMAP command, minus the slow-marked sweeps.
 # Usage: scripts/verify.sh [extra pytest args]
 #   scripts/verify.sh -m tier1     # quick pre-flight (core invariants only)
+#   scripts/verify.sh --pallas     # kernel-parity tier only: the fused
+#                                  # Pallas kernels through the interpreter
+#                                  # on CPU — tier-1 never needs an
+#                                  # accelerator (DESIGN.md §2.7)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "${1:-}" = "--pallas" ]; then
+    shift
+    exec python -m pytest -x -q -m pallas "$@"
+fi
 exec python -m pytest -x -q -m "not slow" "$@"

@@ -33,7 +33,8 @@ class JoinEngineConfig:
     cache_payloads: bool = False   # eval-mode row-block replay (DESIGN §2.6)
     payload_rows: int = 1 << 15    # slab arena rows per node table
     dedup: bool = True             # tier-1 intra-chunk dedup
-    impl: str = "bsearch"          # bsearch | pallas
+    impl: str = "bsearch"          # bsearch | pallas (bounded-search flavor)
+    expand_kernel: str = "auto"    # auto | pallas | xla (DESIGN.md §2.7)
 
     def cache_config(self) -> CacheConfig:
         """Tier-2 device-cache config for the vectorized engine."""
@@ -60,3 +61,5 @@ TPU_ADAPTIVE = JoinEngineConfig(      # Fig 10's size knob made adaptive
 TPU_EVAL_REPLAY = JoinEngineConfig(   # §3.4 evaluation: replay-on-hit
     cache_policy="setassoc", cache_assoc=8, cache_slots=1 << 14,
     cache_payloads=True, payload_rows=1 << 17)
+TPU_FUSED_EXPAND = JoinEngineConfig(  # single-launch EXPAND (DESIGN §2.7)
+    expand_kernel="pallas")

@@ -33,7 +33,6 @@ on every recurring adhesion key (DESIGN.md §2.6).
 """
 from __future__ import annotations
 
-import warnings
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -52,22 +51,13 @@ from .td import TreeDecomposition
 __all__ = ["JaxCachedTrieJoin", "jax_clftj_count", "jax_clftj_evaluate",
            "MAX_KEY_BITS"]
 
-_DEPRECATE_SLOTS = ("cache_slots is deprecated and will be removed next "
-                    "release; pass cache=CacheConfig(policy='direct', "
-                    "slots=...) instead")
-
-
 def _resolve_cache_config(cache: Optional[CacheConfig],
-                          cache_slots: Optional[int],
                           cached_nodes: Optional[frozenset],
                           default_slots: int) -> CacheConfig:
-    """One-release shim: a legacy ``cache_slots`` int maps onto a
-    direct-mapped :class:`CacheConfig` with a DeprecationWarning."""
-    if cache_slots is not None:
-        warnings.warn(_DEPRECATE_SLOTS, DeprecationWarning, stacklevel=3)
-        if cache is None:
-            cache = CacheConfig(policy="direct", slots=int(cache_slots),
-                                enabled_nodes=cached_nodes)
+    """Default the tier-2 config and merge an explicit node filter.  (The
+    legacy ``cache_slots`` int and its one-release DeprecationWarning
+    shim were removed after the promised window — pass
+    ``cache=CacheConfig(...)``.)"""
     if cache is None:
         cache = CacheConfig(policy="direct", slots=default_slots,
                             enabled_nodes=cached_nodes)
@@ -81,21 +71,22 @@ class JaxCachedTrieJoin(JaxTrieJoin):
     """CLFTJ over the frontier engine.
 
     Tier 2 is configured by ``cache`` (a :class:`CacheConfig`;
-    ``slots=0`` disables tier 2).  The legacy ``cache_slots`` int is
-    deprecated — it still maps to a direct-mapped config for one release.
-    ``dedup=False`` disables tier 1 (then it degenerates to vanilla LFTJ
-    with per-subtree counting)."""
+    ``slots=0`` disables tier 2).  ``dedup=False`` disables tier 1 (then
+    it degenerates to vanilla LFTJ with per-subtree counting).
+    ``expand_kernel`` selects the EXPAND kernel path
+    (``"auto"|"pallas"|"xla"`` — kernels/registry.py)."""
 
     def __init__(self, q: CQ, td: TreeDecomposition, order: Sequence[str],
-                 db: Database, capacity: int = 1 << 17,
-                 cache_slots: Optional[int] = None, dedup: bool = True,
+                 db: Database, capacity: int = 1 << 17, dedup: bool = True,
                  impl: str = "bsearch",
                  cached_nodes: Optional[frozenset] = None,
-                 cache: Optional[CacheConfig] = None):
-        super().__init__(q, order, db, capacity=capacity, impl=impl)
+                 cache: Optional[CacheConfig] = None,
+                 expand_kernel: str = "auto"):
+        super().__init__(q, order, db, capacity=capacity, impl=impl,
+                         expand_kernel=expand_kernel)
         self.plan = Plan.build(td, order)
         self.td = td
-        cache = _resolve_cache_config(cache, cache_slots, cached_nodes,
+        cache = _resolve_cache_config(cache, cached_nodes,
                                       default_slots=1 << 16)
         self.dedup = dedup
         maxval = max((int(r.max()) if r.size else 0) for r in self.atom_rows)
@@ -118,15 +109,8 @@ class JaxCachedTrieJoin(JaxTrieJoin):
                       "tier2_resizes": 0, "tier2_slots": 0,
                       "tier2_replay_hits": 0, "tier2_payload_flushes": 0,
                       "tier2_payload_skips": 0, "tier2_payload_throttled": 0,
-                      "tier2_slab_rows": 0, "subtree_launches": 0}
-
-    @property
-    def cache_slots(self) -> int:
-        """Current total tier-2 slots (live tables, else the configured
-        initial size) — kept as a property for legacy callers."""
-        if self.cache.tables:
-            return self.cache.total_slots()
-        return self.cache_config.initial_slots()
+                      "tier2_slab_rows": 0, "subtree_launches": 0,
+                      "expand_calls_pallas": 0, "expand_calls_xla": 0}
 
     # -----------------------------------------------------------------
     def _node_cacheable(self, v: int) -> bool:
@@ -157,6 +141,9 @@ class JaxCachedTrieJoin(JaxTrieJoin):
         self.stats["tier2_slab_rows"] = agg.get("slab_rows", 0)
         self.stats["tier1_rows_collapsed"] += ex.t1_rows_collapsed()
         self.stats["subtree_launches"] += ex.subtree_launches
+        for path, runs in ex.expand_path_runs.items():
+            self.stats[f"expand_calls_{path}"] = (
+                self.stats.get(f"expand_calls_{path}", 0) + runs)
 
     # -----------------------------------------------------------------
     def count(self) -> int:
@@ -189,22 +176,24 @@ class JaxCachedTrieJoin(JaxTrieJoin):
 
 def jax_clftj_count(q: CQ, td: TreeDecomposition, order: Sequence[str],
                     db: Database, capacity: int = 1 << 17,
-                    cache_slots: Optional[int] = None, dedup: bool = True,
-                    impl: str = "bsearch",
-                    cache: Optional[CacheConfig] = None) -> int:
+                    dedup: bool = True, impl: str = "bsearch",
+                    cache: Optional[CacheConfig] = None,
+                    expand_kernel: str = "auto") -> int:
     return JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
-                             cache_slots=cache_slots, dedup=dedup,
-                             impl=impl, cache=cache).count()
+                             dedup=dedup, impl=impl, cache=cache,
+                             expand_kernel=expand_kernel).count()
 
 
 def jax_clftj_evaluate(q: CQ, td: TreeDecomposition, order: Sequence[str],
                        db: Database, capacity: int = 1 << 17,
                        dedup: bool = True, impl: str = "bsearch",
-                       cache: Optional[CacheConfig] = None) -> np.ndarray:
+                       cache: Optional[CacheConfig] = None,
+                       expand_kernel: str = "auto") -> np.ndarray:
     """Materialize the full result as an (N, n) int32 array over ``order``
     columns — the JAX CLFTJ analogue of :func:`~.clftj_ref.clftj_evaluate`."""
     eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
-                            dedup=dedup, impl=impl, cache=cache)
+                            dedup=dedup, impl=impl, cache=cache,
+                            expand_kernel=expand_kernel)
     blocks = list(eng.evaluate())
     if not blocks:
         return np.zeros((0, len(eng.order)), np.int32)

@@ -65,18 +65,20 @@ class StaticCLFTJ(JaxCachedTrieJoin):
 def make_distributed_count(q: CQ, td: TreeDecomposition,
                            order: Sequence[str], db: Database, mesh: Mesh,
                            capacity: int = 1 << 14,
-                           cache_slots: Optional[int] = None,
                            axes: Tuple[str, ...] = ("data",),
-                           cache: Optional[CacheConfig] = None):
+                           cache: Optional[CacheConfig] = None,
+                           expand_kernel: str = "auto"):
     """Build (jitted_fn, engine).  ``jitted_fn()`` -> (count, overflow).
 
     Work partition: shard i of D takes top-level guard runs
     [i·R/D, (i+1)·R/D); relations are replicated (closure constants); the
     final count is a psum over the mesh axes — the single collective.
+    ``expand_kernel`` is resolved per spec at trace time (the registry
+    choice is baked into the unrolled schedule, identically per shard).
     """
-    cache = _resolve_cache_config(cache, cache_slots, None,
-                                  default_slots=1 << 15)
-    eng = StaticCLFTJ(q, td, order, db, capacity=capacity, cache=cache)
+    cache = _resolve_cache_config(cache, None, default_slots=1 << 15)
+    eng = StaticCLFTJ(q, td, order, db, capacity=capacity, cache=cache,
+                      expand_kernel=expand_kernel)
     g_ai, g_lvl = eng.at_depth[0][eng.guard[0]]
     rs = eng.levels[g_ai][g_lvl].runstarts
     nruns = rs.shape[0]

@@ -55,6 +55,16 @@ class Result:
         JAX engine ran with ``cache_payloads=True``."""
         return int(self.counters.get("tier2_replay_hits", 0))
 
+    @property
+    def expand_paths(self) -> Dict[str, int]:
+        """EXPAND chunk launches per kernel path (``kernels/registry.py``
+        dispatch): ``{"pallas": n, "xla": n}`` — which implementation the
+        ``expand_kernel`` knob actually resolved to; empty for non-JAX
+        backends."""
+        return {k[len("expand_calls_"):]: int(v)
+                for k, v in self.counters.items()
+                if k.startswith("expand_calls_")}
+
 
 # -- compile-time accounting (jax.monitoring duration events) --------------
 
@@ -122,29 +132,27 @@ def count(q: CQ, db: Database, algorithm: str = "clftj",
           td: Optional[TreeDecomposition] = None,
           order: Optional[Sequence[str]] = None,
           policy: Optional[CachePolicy] = None,
-          capacity: int = 1 << 16, cache_slots: Optional[int] = None,
+          capacity: int = 1 << 16,
           dedup: bool = True, impl: str = "bsearch",
-          cache: Optional[CacheConfig] = None) -> Result:
+          cache: Optional[CacheConfig] = None,
+          expand_kernel: str = "auto") -> Result:
     """Count ``q`` over ``db``.  ``cache`` configures the tier-2 cache of the
     JAX engine (policy / associativity / slots / dynamic budget); for the
     ``ref`` backend it is mapped onto the paper's :class:`CachePolicy`
-    unless an explicit ``policy`` is given.  ``cache_slots`` is deprecated
-    (one-release shim onto a direct-mapped ``CacheConfig``)."""
+    unless an explicit ``policy`` is given.  ``expand_kernel`` selects the
+    EXPAND kernel path of the JAX engines (``"auto"`` dispatches per
+    platform/spec through ``kernels/registry.py``; the chosen path lands
+    in ``Result.expand_paths``)."""
     t0 = time.perf_counter()
     counters = Counters()
-    if cache_slots is not None:
-        # resolve the deprecated parameter up front so BOTH backends warn
-        # and honor it during the migration window
-        from .cached_frontier import _resolve_cache_config
-        cache = _resolve_cache_config(cache, cache_slots, None,
-                                      default_slots=1 << 16)
     td, order = _plan(q, db, td, order)
     t1 = time.perf_counter()
     with _CompileClock() as cc:
         if algorithm == "clftj":
             if backend == "jax":
                 eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
-                                        dedup=dedup, impl=impl, cache=cache)
+                                        dedup=dedup, impl=impl, cache=cache,
+                                        expand_kernel=expand_kernel)
                 c = eng.count()
                 counters_out = dict(eng.stats)
             else:
@@ -154,9 +162,11 @@ def count(q: CQ, db: Database, algorithm: str = "clftj",
                 counters_out = counters.snapshot()
         elif algorithm == "lftj":
             if backend == "jax":
-                c = JaxTrieJoin(q, order, db, capacity=capacity,
-                                impl=impl).count()
-                counters_out = {}
+                eng = JaxTrieJoin(q, order, db, capacity=capacity,
+                                  impl=impl, expand_kernel=expand_kernel)
+                c = eng.count()
+                counters_out = {f"expand_calls_{k}": v for k, v in
+                                eng.expand_call_counts().items()}
             else:
                 c = LFTJ(q, order, db, counters).count()
                 counters_out = counters.snapshot()
@@ -179,7 +189,8 @@ def evaluate(q: CQ, db: Database, algorithm: str = "clftj",
              policy: Optional[CachePolicy] = None,
              capacity: int = 1 << 16, impl: str = "bsearch",
              dedup: bool = True,
-             cache: Optional[CacheConfig] = None) -> Result:
+             cache: Optional[CacheConfig] = None,
+             expand_kernel: str = "auto") -> Result:
     """Materialize ``q``'s full result.  ``backend="jax"`` runs the
     schedule executor in evaluation mode (tier-1 representatives replayed
     as row blocks); tuples are identical to the host oracle's.  With
@@ -195,7 +206,8 @@ def evaluate(q: CQ, db: Database, algorithm: str = "clftj",
         if algorithm == "clftj":
             if backend == "jax":
                 eng = JaxCachedTrieJoin(q, td, order, db, capacity=capacity,
-                                        dedup=dedup, impl=impl, cache=cache)
+                                        dedup=dedup, impl=impl, cache=cache,
+                                        expand_kernel=expand_kernel)
                 blocks = list(eng.evaluate())
                 rows = (np.concatenate(blocks, axis=0) if blocks
                         else np.zeros((0, len(order)), np.int32))
@@ -210,7 +222,8 @@ def evaluate(q: CQ, db: Database, algorithm: str = "clftj",
             if backend == "jax":
                 from .frontier import jax_lftj_evaluate
                 rows = jax_lftj_evaluate(q, order, db, capacity=capacity,
-                                         impl=impl)
+                                         impl=impl,
+                                         expand_kernel=expand_kernel)
             else:
                 rows = np.asarray(
                     list(LFTJ(q, order, db, counters).evaluate()),

@@ -6,7 +6,10 @@ capacity matrix of partial assignments (+ per-atom trie ranges); expanding
 variable ``x_d`` enumerates, for every row, the distinct candidate values of a
 *guard* atom (via precomputed run-start arrays — the columnar trie) and
 verifies membership in every other participating atom with batched bounded
-binary search (``kernels/leapfrog``).  The frontier after level d contains
+binary search.  The expansion step itself is a kernel behind the dispatch
+registry (``kernels/registry.py`` → fused Pallas or the XLA op chain in
+``kernels/expand/``, per the ``expand_kernel`` knob; DESIGN.md §2.7).
+The frontier after level d contains
 exactly the depth-d partial assignments LFTJ would visit, so worst-case
 optimality is inherited.  The static chunk capacity bounds *device* memory
 per launch (each morsel is one fixed-shape chunk); the executor holds a
@@ -29,7 +32,6 @@ Counting uses 64-bit factors; engine entry points run under an
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, NamedTuple, Sequence, Tuple
 
@@ -39,7 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
-from ..kernels.leapfrog import ops as lf_ops
+from ..kernels import registry as kernels
 from .cq import CQ
 from .db import Database
 from .schedule import MAX_KEY_BITS, ScheduleExecutor, lower
@@ -89,13 +91,20 @@ class JaxTrieJoin:
     """Vectorized LFTJ: count / evaluate a full CQ over a fixed order."""
 
     def __init__(self, q: CQ, order: Sequence[str], db: Database,
-                 capacity: int = 1 << 17, impl: str = "bsearch"):
+                 capacity: int = 1 << 17, impl: str = "bsearch",
+                 expand_kernel: str = "auto"):
+        if expand_kernel not in kernels.EXPAND_MODES:
+            raise ValueError(f"expand_kernel must be one of "
+                             f"{kernels.EXPAND_MODES}, got {expand_kernel!r}")
         self.q = q
         self.order = tuple(order)
         self.n = len(self.order)
         self.db = db
         self.capacity = int(capacity)
         self.impl = impl
+        self.expand_kernel = expand_kernel
+        # depth -> impl the registry resolved for that EXPAND(d)
+        self.expand_paths: Dict[int, str] = {}
         pos = {x: i for i, x in enumerate(self.order)}
 
         # per-atom tries, variables permuted into global order
@@ -156,26 +165,54 @@ class JaxTrieJoin:
 
     # ------------------------------------------------------------------
     def _expand_fn(self, d: int):
-        """Return a callable running the (module-level, jit-cached)
-        expansion step for depth d."""
+        """Return the registry-dispatched expansion step for depth d
+        (fused Pallas or the XLA chain, per ``expand_kernel`` — the
+        chosen path is recorded in ``expand_paths[d]``).  The XLA step
+        stays module-level jitted in ``kernels/expand/xla.py`` so its
+        jit cache is shared across engine instances."""
         if d in self._expand_jits:
             return self._expand_jits[d]
+        args = self.expand_kernel_args(d)
+        spec = kernels.ExpandSpec(
+            capacity=self.capacity, n_vars=self.n, n_atoms=self.m,
+            n_others=len(args["other_ais"]),
+            dtype=str(args["g_col"].dtype),
+            x64=bool(jax.config.jax_enable_x64))
+        fn, chosen = kernels.expand_fn(
+            spec, mode=self.expand_kernel, impl=self.impl,
+            sizes=self.sizes, **args)
+        self.expand_paths[d] = chosen
+        self._expand_jits[d] = fn
+        return fn
+
+    def expand_kernel_args(self, d: int) -> Dict:
+        """The per-depth kernel-builder arguments derived from the
+        columnar tries (the single source the registry, tests, and
+        benchmarks build EXPAND(d) kernels from)."""
         parts = self.at_depth[d]
         gi = self.guard[d]
         g_ai, g_lvl = parts[gi]
         g = self.levels[g_ai][g_lvl]
         others = tuple((ai, lvl) for k, (ai, lvl) in enumerate(parts)
                        if k != gi)
-        other_cols = tuple(self.levels[ai][lvl].col for ai, lvl in others)
-        other_ais = tuple(ai for ai, _ in others)
+        return dict(d=d, g_ai=g_ai,
+                    other_ais=tuple(ai for ai, _ in others),
+                    g_col=g.col, g_rs=g.runstarts,
+                    other_cols=tuple(self.levels[ai][lvl].col
+                                     for ai, lvl in others),
+                    n_rows_g=self.sizes[g_ai])
 
-        def fn(F: Frontier):
-            return _expand_step(F, g.col, g.runstarts, other_cols,
-                                d=d, g_ai=g_ai, other_ais=other_ais,
-                                n_rows_g=self.sizes[g_ai], impl=self.impl)
+    def expand_impl(self, d: int) -> str:
+        """Which kernel path EXPAND(d) runs on ("pallas" | "xla")."""
+        self._expand_fn(d)
+        return self.expand_paths[d]
 
-        self._expand_jits[d] = fn
-        return fn
+    def expand_call_counts(self) -> Dict[str, int]:
+        """Per-path EXPAND chunk-launch counts of the last execution."""
+        ex = getattr(self, "last_executor", None)
+        if ex is None:
+            return {}
+        return dict(ex.expand_path_runs)
 
     # ------------------------------------------------------------------
     def expand_plan(self, d: int) -> Tuple[int, np.ndarray, int]:
@@ -266,70 +303,18 @@ class JaxTrieJoin:
             yield from ex.evaluate()
 
 
-@jax.jit
-def _compact(F: Frontier) -> Frontier:
-    """Stable-partition valid rows to the front of the chunk."""
-    perm = jnp.argsort(jnp.logical_not(F.valid), stable=True)
-    return Frontier(*(x[perm] for x in F))
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("d", "g_ai", "other_ais", "n_rows_g", "impl"))
-def _expand_step(F: Frontier, g_col, g_rs, other_cols, *, d: int, g_ai: int,
-                 other_ais: Tuple[int, ...], n_rows_g: int, impl: str):
-    """One frontier expansion (module-level so the jit cache is shared by
-    every engine instance with the same query structure / array shapes)."""
-    C = F.assign.shape[0]
-    nruns = g_rs.shape[0]
-    r0 = jnp.searchsorted(g_rs, F.lo[:, g_ai], side="left")
-    r1 = jnp.searchsorted(g_rs, F.hi[:, g_ai], side="left")
-    counts = jnp.where(F.valid, r1 - r0, 0).astype(jnp.int32)
-    offsets = jnp.cumsum(counts) - counts               # exclusive
-    needed = offsets[-1] + counts[-1]
-    slot = jnp.arange(C, dtype=jnp.int32)
-    src = jnp.searchsorted(offsets, slot, side="right") - 1
-    src = jnp.clip(src, 0, C - 1)
-    delta = slot - offsets[src]
-    ok = (slot < needed) & (delta < counts[src])
-    if nruns:
-        k = jnp.clip(r0[src] + delta, 0, nruns - 1)
-        pos = g_rs[k]
-        value = g_col[jnp.clip(pos, 0, max(n_rows_g - 1, 0))]
-        run_end = jnp.where(k + 1 < nruns,
-                            g_rs[jnp.clip(k + 1, 0, nruns - 1)],
-                            n_rows_g).astype(jnp.int32)
-    else:
-        k = jnp.zeros_like(slot)
-        pos = jnp.zeros_like(slot)
-        value = jnp.zeros_like(slot)
-        run_end = jnp.zeros_like(slot)
-        ok = ok & False
-    lo2 = F.lo[src].at[:, g_ai].set(pos)
-    hi2 = F.hi[src].at[:, g_ai].set(run_end)
-    for ai, col in zip(other_ais, other_cols):
-        s = lf_ops.lower_bound(col, value, F.lo[src, ai], F.hi[src, ai],
-                               impl=impl)
-        e = lf_ops.upper_bound(col, value, s, F.hi[src, ai], impl=impl)
-        ok = ok & (s < e)
-        lo2 = lo2.at[:, ai].set(s.astype(jnp.int32))
-        hi2 = hi2.at[:, ai].set(e.astype(jnp.int32))
-    assign2 = F.assign[src].at[:, d].set(value.astype(jnp.int32))
-    out = Frontier(assign=assign2, factor=F.factor[src], valid=ok,
-                   orig=F.orig[src], lo=lo2.astype(jnp.int32),
-                   hi=hi2.astype(jnp.int32))
-    return _compact(out), needed
-
-
 def jax_lftj_count(q: CQ, order: Sequence[str], db: Database,
-                   capacity: int = 1 << 17, impl: str = "bsearch") -> int:
-    return JaxTrieJoin(q, order, db, capacity=capacity, impl=impl).count()
+                   capacity: int = 1 << 17, impl: str = "bsearch",
+                   expand_kernel: str = "auto") -> int:
+    return JaxTrieJoin(q, order, db, capacity=capacity, impl=impl,
+                       expand_kernel=expand_kernel).count()
 
 
 def jax_lftj_evaluate(q: CQ, order: Sequence[str], db: Database,
-                      capacity: int = 1 << 17,
-                      impl: str = "bsearch") -> np.ndarray:
-    eng = JaxTrieJoin(q, order, db, capacity=capacity, impl=impl)
+                      capacity: int = 1 << 17, impl: str = "bsearch",
+                      expand_kernel: str = "auto") -> np.ndarray:
+    eng = JaxTrieJoin(q, order, db, capacity=capacity, impl=impl,
+                      expand_kernel=expand_kernel)
     blocks = list(eng.evaluate())
     if not blocks:
         return np.zeros((0, len(eng.order)), np.int32)

@@ -430,6 +430,9 @@ class ScheduleExecutor:
         # morsel, so the sync budget scales with these, never with the
         # number of chunks inside one op execution
         self.op_runs = {"expand": 0, "span": 0, "fold": 0, "emit": 0}
+        # EXPAND chunk launches per kernel path (the registry's choice is
+        # per-depth; see kernels/registry.py and Result.expand_paths)
+        self.expand_path_runs = {"pallas": 0, "xla": 0}
         self._emitted: List[Tuple[Any, Any]] = []  # (assign, valid) only
 
     # -- public entry points -------------------------------------------
@@ -526,6 +529,9 @@ class ScheduleExecutor:
                 host = {k: np.asarray(v) for k, v in host.items()}
                 to_run.extend(eng.split_chunk_host(host, d, counts))
         fn = eng._expand_fn(d)
+        path = getattr(eng, "expand_paths", {}).get(d, "xla")
+        self.expand_path_runs[path] = (
+            self.expand_path_runs.get(path, 0) + len(to_run))
         return self._admit([fn(F)[0] for F in to_run], "expand-admit")
 
     # -- ENTER_CHILD (one parent chunk) --------------------------------
@@ -803,6 +809,9 @@ def execute_static(schedule: Schedule, engine, F0, tables: Dict[int, tuple],
     threaded functionally (``tables[c]`` is the (keys, vals, used, stamp,
     cost) tuple of ``core/cache.py``), LRU tick statically unrolled.
     Returns ``(count, overflow, tables)`` — ``shard_map``-able as-is.
+    EXPAND ops route through the same registry-dispatched kernels as the
+    host executor (``engine._expand_fn`` resolves the ``expand_kernel``
+    knob at build time, so the choice is baked in before tracing).
     """
     from .cache import _insert as cache_insert, _probe as cache_probe
     C = engine.capacity

@@ -5,6 +5,9 @@ SNAP/IMDB are not available offline; the paper's performance story rests on
 
   * ``erdos_renyi``     — balanced degrees (p2p-Gnutella04 analogue),
   * ``barabasi_albert`` — heavy-tailed degrees (wiki-Vote / ego-* analogue),
+  * ``zipf_graph``      — one edge table, Zipf-distributed endpoint
+    popularity (hot vertices make adhesion keys recur — the conformance
+    zoo's and the kernel benchmarks' shared skew source),
   * ``zipf_bipartite``  — two-table person/movie workload with separately
     tunable per-attribute skew (IMDB cast_info analogue, Fig 13/14).
 
@@ -40,6 +43,16 @@ def barabasi_albert(n: int, m_per_node: int = 3, seed: int = 0) -> np.ndarray:
             edges.append((v, u))
             repeated.extend([v, u])
     return np.asarray(edges, np.int64)
+
+
+def zipf_graph(nv: int, ne: int, a: float, seed: int = 0) -> np.ndarray:
+    """Edges with Zipf(``a``)-distributed endpoint popularity."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, nv + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    p /= p.sum()
+    return np.stack([rng.choice(nv, size=ne, p=p),
+                     rng.choice(nv, size=ne, p=p)], axis=1).astype(np.int64)
 
 
 def zipf_bipartite(n_left: int, n_right: int, m: int, a_left: float,

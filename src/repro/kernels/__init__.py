@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Device-kernel layer.  Entry-point convention: every kernel is reached
+# through kernels/registry.py (dispatch + autotune + fallback); each
+# kernel package keeps <name>.py / ref.py where ref.py is the pure
+# oracle its implementations are validated against.
+#   expand/    — fused frontier expansion (fused Pallas | XLA chain)
+#   leapfrog/  — batched bounded lower/upper bound (Pallas dense count)
+#   flash_attention/ — LM-substrate attention (own ops.py facade)

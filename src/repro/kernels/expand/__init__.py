@@ -1,0 +1,17 @@
+"""Fused-EXPAND kernel subsystem (DESIGN.md §2.7).
+
+One ``EXPAND(d)`` frontier expansion as a device kernel, three ways:
+
+  * ``fused.py`` — the single-pass Pallas kernel (compiled on TPU/GPU,
+    interpret mode on CPU);
+  * ``xla.py``   — the jnp op chain XLA fuses piecewise (the
+    always-available fallback, and the former ``core/frontier`` step);
+  * ``ref.py``   — the plain-numpy oracle both are validated against.
+
+Reach implementations through ``kernels.registry`` (``expand_fn``), never
+directly — dispatch, autotune, and fallback live there.
+"""
+from .fused import FusedExpandConfig
+from .ref import expand_ref
+
+__all__ = ["FusedExpandConfig", "expand_ref"]

@@ -1,0 +1,71 @@
+"""Plain-numpy oracle for one EXPAND(d) step.
+
+Scalar-loop enumeration with ``np.searchsorted`` — obviously correct and
+completely independent of both device implementations (the jnp op chain
+in ``xla.py`` and the fused Pallas kernel in ``fused.py``), which the
+parity tests validate against it.  Returns only the *valid* output rows
+(in stable enumeration order — the prefix both device paths compact to)
+plus the ``needed`` slot total; invalid tail rows are not part of the
+expansion contract.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+__all__ = ["expand_ref"]
+
+
+def expand_ref(host: Dict[str, np.ndarray], g_col: np.ndarray,
+               g_rs: np.ndarray, other_cols, *, d: int, g_ai: int,
+               other_ais: Tuple[int, ...], n_rows_g: int,
+               ) -> Tuple[Dict[str, np.ndarray], int]:
+    """``host`` is a chunk as numpy (``Frontier._asdict`` fetched).
+    Returns ``(rows, needed)`` where ``rows`` holds the surviving rows'
+    assign/factor/orig/lo/hi stacked in output order."""
+    out = {k: [] for k in ("assign", "factor", "orig", "lo", "hi")}
+    needed = 0
+    nruns = len(g_rs)
+    for i in range(host["valid"].shape[0]):
+        if not host["valid"][i]:
+            continue
+        r0 = int(np.searchsorted(g_rs, host["lo"][i, g_ai], side="left"))
+        r1 = int(np.searchsorted(g_rs, host["hi"][i, g_ai], side="left"))
+        needed += r1 - r0
+        for k in range(r0, r1):
+            pos = int(g_rs[k])
+            value = int(g_col[pos])
+            run_end = int(g_rs[k + 1]) if k + 1 < nruns else n_rows_g
+            lo2, hi2 = host["lo"][i].copy(), host["hi"][i].copy()
+            lo2[g_ai], hi2[g_ai] = pos, run_end
+            ok = True
+            for ai, col in zip(other_ais, other_cols):
+                w0, w1 = int(host["lo"][i, ai]), int(host["hi"][i, ai])
+                s = w0 + int(np.searchsorted(col[w0:w1], value, side="left"))
+                e = w0 + int(np.searchsorted(col[w0:w1], value, side="right"))
+                if not s < e:
+                    ok = False
+                    break
+                lo2[ai], hi2[ai] = s, e
+            if not ok:
+                continue
+            assign2 = host["assign"][i].copy()
+            assign2[d] = value
+            out["assign"].append(assign2)
+            out["factor"].append(host["factor"][i])
+            out["orig"].append(host["orig"][i])
+            out["lo"].append(lo2)
+            out["hi"].append(hi2)
+    n = len(out["assign"])
+    rows = {
+        "assign": (np.stack(out["assign"]) if n
+                   else np.zeros((0, host["assign"].shape[1]), np.int32)),
+        "factor": np.asarray(out["factor"], host["factor"].dtype),
+        "orig": np.asarray(out["orig"], np.int32),
+        "lo": (np.stack(out["lo"]) if n
+               else np.zeros((0, host["lo"].shape[1]), np.int32)),
+        "hi": (np.stack(out["hi"]) if n
+               else np.zeros((0, host["hi"].shape[1]), np.int32)),
+    }
+    return rows, needed

@@ -1,0 +1,96 @@
+"""The XLA-op EXPAND path: one frontier expansion as a jnp op chain.
+
+This is the expansion step that used to live in ``core/frontier.py``
+(DESIGN.md §2.1), relocated behind the kernel registry so every EXPAND
+implementation shares one entry-point convention.  Semantics are the
+contract the fused Pallas kernel (``fused.py``) is held to, and both are
+validated against the plain-numpy oracle in ``ref.py``:
+
+* enumerate each valid row's guard candidate runs (searchsorted over the
+  run-start array), lay the (row, candidate) pairs out over output slots
+  via cumsum + searchsorted;
+* verify each candidate's membership in every other participating atom
+  with bounded binary search (two per atom), narrowing that atom's
+  [lo, hi) trie window;
+* compact surviving rows to the front of the chunk (stable partition).
+
+XLA materializes ~6 intermediate arrays per participating atom here — the
+memory-traffic motivation for the fused kernel.  The functions are generic
+over any Frontier-shaped NamedTuple (assign/factor/valid/orig/lo/hi).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..registry import lower_bound, upper_bound
+
+__all__ = ["build", "expand_step", "compact"]
+
+
+@jax.jit
+def compact(F):
+    """Stable-partition valid rows to the front of the chunk."""
+    perm = jnp.argsort(jnp.logical_not(F.valid), stable=True)
+    return type(F)(*(x[perm] for x in F))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d", "g_ai", "other_ais", "n_rows_g", "impl"))
+def expand_step(F, g_col, g_rs, other_cols, *, d: int, g_ai: int,
+                other_ais: Tuple[int, ...], n_rows_g: int, impl: str):
+    """One frontier expansion (module-level so the jit cache is shared by
+    every engine instance with the same query structure / array shapes)."""
+    C = F.assign.shape[0]
+    nruns = g_rs.shape[0]
+    r0 = jnp.searchsorted(g_rs, F.lo[:, g_ai], side="left")
+    r1 = jnp.searchsorted(g_rs, F.hi[:, g_ai], side="left")
+    counts = jnp.where(F.valid, r1 - r0, 0).astype(jnp.int32)
+    offsets = jnp.cumsum(counts) - counts               # exclusive
+    needed = offsets[-1] + counts[-1]
+    slot = jnp.arange(C, dtype=jnp.int32)
+    src = jnp.searchsorted(offsets, slot, side="right") - 1
+    src = jnp.clip(src, 0, C - 1)
+    delta = slot - offsets[src]
+    ok = (slot < needed) & (delta < counts[src])
+    if nruns:
+        k = jnp.clip(r0[src] + delta, 0, nruns - 1)
+        pos = g_rs[k]
+        value = g_col[jnp.clip(pos, 0, max(n_rows_g - 1, 0))]
+        run_end = jnp.where(k + 1 < nruns,
+                            g_rs[jnp.clip(k + 1, 0, nruns - 1)],
+                            n_rows_g).astype(jnp.int32)
+    else:
+        k = jnp.zeros_like(slot)
+        pos = jnp.zeros_like(slot)
+        value = jnp.zeros_like(slot)
+        run_end = jnp.zeros_like(slot)
+        ok = ok & False
+    lo2 = F.lo[src].at[:, g_ai].set(pos)
+    hi2 = F.hi[src].at[:, g_ai].set(run_end)
+    for ai, col in zip(other_ais, other_cols):
+        s = lower_bound(col, value, F.lo[src, ai], F.hi[src, ai], impl=impl)
+        e = upper_bound(col, value, s, F.hi[src, ai], impl=impl)
+        ok = ok & (s < e)
+        lo2 = lo2.at[:, ai].set(s.astype(jnp.int32))
+        hi2 = hi2.at[:, ai].set(e.astype(jnp.int32))
+    assign2 = F.assign[src].at[:, d].set(value.astype(jnp.int32))
+    out = F._replace(assign=assign2, factor=F.factor[src], valid=ok,
+                     orig=F.orig[src], lo=lo2.astype(jnp.int32),
+                     hi=hi2.astype(jnp.int32))
+    return compact(out), needed
+
+
+def build(*, d: int, g_ai: int, other_ais: Tuple[int, ...], n_rows_g: int,
+          impl: str, g_col, g_rs, other_cols):
+    """Close the per-depth arrays over :func:`expand_step` → fn(F)."""
+
+    def fn(F):
+        return expand_step(F, g_col, g_rs, other_cols, d=d, g_ai=g_ai,
+                           other_ais=other_ais, n_rows_g=n_rows_g, impl=impl)
+
+    return fn

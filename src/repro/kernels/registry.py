@@ -1,0 +1,309 @@
+"""Kernel registry: the single entry-point convention for device kernels.
+
+Every compute kernel in the repo is reached through this module, never by
+importing an implementation module directly:
+
+  * **bounded search** (``lower_bound``/``upper_bound``) — the batched
+    leapfrog-seek primitive, with ``impl`` dispatch between the branchless
+    fixed-trip binary search (production on CPU/host), the Pallas dense
+    count kernel (``kernels/leapfrog``; interpret mode on CPU), and the
+    dense jnp oracle (``kernels/leapfrog/ref.py`` — tests).  Folded here
+    from the former ``kernels/leapfrog/ops.py``.
+  * **fused EXPAND** (``expand_fn``) — one frontier-expansion step
+    (DESIGN.md §2.7).  Two implementations: ``"pallas"`` — the fused
+    single-pass kernel (``kernels/expand/fused.py``: guard-run
+    enumeration, membership binary searches, mask reduction, and frontier
+    compaction in one ``pallas_call``; interpret mode on CPU) — and
+    ``"xla"`` — the original jnp op chain (``kernels/expand/xla.py``),
+    the always-available fallback.  ``kernels/expand/ref.py`` is the
+    plain-numpy oracle both are validated against.
+
+Dispatch (``select_expand``): a forced mode wins (falling back to XLA only
+if the Pallas build itself raises — recorded in ``failures()``); degenerate
+specs (empty guard trie / empty participating relation, where expansion is
+statically empty) always take the XLA path; otherwise ``"auto"`` resolves
+per :class:`ExpandSpec` — on TPU/GPU the fused kernel is measured against
+the XLA chain once per (spec, platform) and the winner is cached (the tiny
+measured-autotune cache, :func:`autotune_cache`); on CPU ``"auto"`` picks
+XLA without measuring (interpret mode exists for conformance, not speed —
+measuring it would only burn test time; pass ``measure=True`` to force a
+measurement anywhere).
+"""
+from __future__ import annotations
+
+import functools
+import math
+import time
+import warnings
+from dataclasses import dataclass
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .leapfrog import leapfrog, ref as leapfrog_ref
+
+__all__ = ["ExpandSpec", "lower_bound", "upper_bound", "expand_fn",
+           "select_expand", "autotune_cache", "failures",
+           "clear_autotune_cache", "device_op_count"]
+
+
+# ---------------------------------------------------------------------------
+# Bounded search (the former kernels/leapfrog/ops.py)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("strict",))
+def _bsearch(col: jnp.ndarray, values: jnp.ndarray, lo: jnp.ndarray,
+             hi: jnp.ndarray, strict: bool = True) -> jnp.ndarray:
+    """Vectorized bounded binary search; log2(N)+1 fixed iterations."""
+    n = col.shape[0]
+    if n == 0:
+        return lo
+    trips = max(1, int(math.ceil(math.log2(n + 1))) + 1)
+    dtype = lo.dtype
+
+    def body(_, lh):
+        lo_, hi_ = lh
+        go = lo_ < hi_
+        mid = (lo_ + hi_) >> 1
+        x = col[jnp.clip(mid, 0, n - 1)]
+        pred = (x < values) if strict else (x <= values)
+        lo2 = jnp.where(go & pred, mid + 1, lo_)
+        hi2 = jnp.where(go & ~pred, mid, hi_)
+        return lo2, hi2
+
+    lo_, _ = jax.lax.fori_loop(0, trips, body, (lo.astype(dtype),
+                                                hi.astype(dtype)))
+    return lo_
+
+
+def lower_bound(col, values, lo, hi, impl: str = "bsearch"):
+    if impl == "bsearch":
+        return _bsearch(col, values, lo, hi, strict=True)
+    if impl == "pallas":
+        return leapfrog.lower_bound_pallas(col, values, lo, hi)
+    if impl == "ref":
+        return leapfrog_ref.lower_bound_ref(col, values, lo, hi)
+    raise ValueError(impl)
+
+
+def upper_bound(col, values, lo, hi, impl: str = "bsearch"):
+    if impl == "bsearch":
+        return _bsearch(col, values, lo, hi, strict=False)
+    if impl == "pallas":
+        return leapfrog.upper_bound_pallas(col, values, lo, hi)
+    if impl == "ref":
+        return leapfrog_ref.upper_bound_ref(col, values, lo, hi)
+    raise ValueError(impl)
+
+
+# ---------------------------------------------------------------------------
+# EXPAND dispatch + autotune
+# ---------------------------------------------------------------------------
+
+EXPAND_MODES = ("auto", "pallas", "xla")
+
+
+@dataclass(frozen=True)
+class ExpandSpec:
+    """The dispatch key of one EXPAND(d) op: what the kernel choice may
+    legitimately depend on.  Everything else (the actual trie arrays, the
+    depth, the guard index) parameterizes the *built* function, not the
+    *selection*."""
+
+    capacity: int     # chunk capacity C
+    n_vars: int       # assignment columns (order length)
+    n_atoms: int      # lo/hi columns (atom count m)
+    n_others: int     # participating membership atoms at this depth
+    dtype: str        # trie column dtype (e.g. "int32")
+    x64: bool         # 64-bit factor arithmetic enabled
+
+
+# (spec, platform) -> chosen impl; (spec, platform) -> error string
+_AUTOTUNE: Dict[Tuple[ExpandSpec, str], str] = {}
+_FAILURES: Dict[Tuple[ExpandSpec, str], str] = {}
+
+
+def autotune_cache() -> Dict[Tuple[ExpandSpec, str], str]:
+    return dict(_AUTOTUNE)
+
+
+def failures() -> Dict[Tuple[ExpandSpec, str], str]:
+    return dict(_FAILURES)
+
+
+def clear_autotune_cache() -> None:
+    _AUTOTUNE.clear()
+    _FAILURES.clear()
+
+
+class _BenchChunk(NamedTuple):
+    """Frontier-shaped chunk for autotune measurement (the kernel builders
+    are generic over any assign/factor/valid/orig/lo/hi NamedTuple, so the
+    registry does not need to import ``core.frontier``)."""
+
+    assign: jnp.ndarray
+    factor: jnp.ndarray
+    valid: jnp.ndarray
+    orig: jnp.ndarray
+    lo: jnp.ndarray
+    hi: jnp.ndarray
+
+
+def _measure_chunk(spec: ExpandSpec, sizes: Sequence[int],
+                   cap: int) -> _BenchChunk:
+    """A synthetic chunk representative enough to time both paths: the
+    first quarter of the rows valid, each spanning its atoms' full tries."""
+    C, m, n = cap, spec.n_atoms, spec.n_vars
+    n_valid = max(1, C // 4)
+    factor_dtype = jnp.int64 if spec.x64 else jnp.int32
+    return _BenchChunk(
+        assign=jnp.zeros((C, n), jnp.int32),
+        factor=jnp.ones((C,), factor_dtype),
+        valid=jnp.asarray(np.arange(C) < n_valid),
+        orig=jnp.zeros((C,), jnp.int32),
+        lo=jnp.zeros((C, m), jnp.int32),
+        hi=jnp.tile(jnp.asarray(list(sizes), jnp.int32)[None, :], (C, 1)))
+
+
+def _time_fn(fn: Callable, F: _BenchChunk, reps: int = 2) -> float:
+    jax.block_until_ready(fn(F))  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(F))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def select_expand(spec: ExpandSpec, mode: str = "auto",
+                  platform: Optional[str] = None,
+                  measure: Optional[bool] = None,
+                  builders: Optional[Dict[str, Callable[[], Callable]]] = None,
+                  sizes: Optional[Sequence[int]] = None) -> str:
+    """Resolve ``mode`` to a concrete impl name for ``spec``.
+
+    ``builders`` maps impl name to a zero-arg builder (needed only when a
+    measurement actually runs); ``measure`` overrides the platform rule
+    (None → measure on tpu/gpu only)."""
+    if mode not in EXPAND_MODES:
+        raise ValueError(f"expand_kernel must be one of {EXPAND_MODES}, "
+                         f"got {mode!r}")
+    platform = platform or jax.default_backend()
+    if mode != "auto":
+        return mode
+    key = (spec, platform)
+    if key in _AUTOTUNE:
+        return _AUTOTUNE[key]
+    do_measure = (platform in ("tpu", "gpu")) if measure is None else measure
+    if not do_measure or builders is None:
+        # CPU default: the XLA chain; interpret-mode Pallas is a
+        # conformance vehicle, not a perf path
+        choice = "pallas" if platform in ("tpu", "gpu") else "xla"
+        _AUTOTUNE[key] = choice
+        return choice
+    cap = min(spec.capacity, 1 << 9)
+    F = _measure_chunk(spec, sizes or [1] * spec.n_atoms, cap)
+    timings: Dict[str, float] = {}
+    for name in ("pallas", "xla"):
+        try:
+            timings[name] = _time_fn(builders[name](), F)
+        except Exception as e:  # pragma: no cover - backend-specific
+            _FAILURES[key] = f"{name}: {e}"
+    choice = min(timings, key=timings.get) if timings else "xla"
+    _AUTOTUNE[key] = choice
+    return choice
+
+
+def expand_fn(spec: ExpandSpec, *, mode: str = "auto", impl: str = "bsearch",
+              config=None, measure: Optional[bool] = None,
+              d: int, g_ai: int, other_ais: Tuple[int, ...],
+              g_col: jnp.ndarray, g_rs: jnp.ndarray,
+              other_cols: Tuple[jnp.ndarray, ...], n_rows_g: int,
+              sizes: Optional[Sequence[int]] = None,
+              ) -> Tuple[Callable, str]:
+    """Build the EXPAND(d) step for ``spec``: returns ``(fn, chosen)``
+    where ``fn(F) -> (F', needed)`` and ``chosen`` names the impl that
+    will actually run.  ``impl`` is the bounded-search flavor used by the
+    XLA chain; ``config`` is a :class:`~.expand.fused.FusedExpandConfig`
+    for the Pallas path."""
+    from .expand import fused as _fused, xla as _xla  # lazy: no import cycle
+
+    def build_xla():
+        return _xla.build(d=d, g_ai=g_ai, other_ais=other_ais,
+                          n_rows_g=n_rows_g, impl=impl,
+                          g_col=g_col, g_rs=g_rs, other_cols=other_cols)
+
+    def build_fused():
+        return _fused.build(d=d, g_ai=g_ai, other_ais=other_ais,
+                            n_rows_g=n_rows_g, g_col=g_col, g_rs=g_rs,
+                            other_cols=other_cols, config=config)
+
+    # statically-empty expansions (no guard runs, or an empty participating
+    # relation makes every membership test fail): the XLA chain already
+    # short-circuits these shapes — never worth a kernel launch
+    degenerate = (n_rows_g == 0 or g_rs.shape[0] == 0
+                  or any(c.shape[0] == 0 for c in other_cols))
+    if degenerate:
+        return build_xla(), "xla"
+    chosen = select_expand(
+        spec, mode=mode, measure=measure, sizes=sizes,
+        builders={"pallas": build_fused, "xla": build_xla})
+    if chosen == "pallas":
+        try:
+            fn = build_fused()
+            # the builder only closes a jitted wrapper — the pallas_call
+            # and its kernel are constructed at trace time, so validate
+            # the trace eagerly (abstract, no compute) or a kernel bug
+            # would only surface at the first call mid-query.  Backend
+            # *compile* failures can still escape this (they are caught
+            # by the autotune measurement on the "auto" path).
+            jax.eval_shape(fn, _measure_chunk(spec, sizes or
+                                              [1] * spec.n_atoms,
+                                              spec.capacity))
+            return fn, "pallas"
+        except Exception as e:  # the always-available fallback
+            _FAILURES[(spec, jax.default_backend())] = f"pallas: {e}"
+            warnings.warn(f"fused EXPAND unavailable for {spec}: {e}; "
+                          "falling back to the XLA path")
+            return build_xla(), "xla"
+    return build_xla(), "xla"
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+# primitives that are metadata/layout-only — XLA folds them into their
+# producer/consumer, so they are not separately-materialized device ops
+_METADATA_PRIMS = frozenset({
+    "slice", "squeeze", "reshape", "broadcast_in_dim",
+    "convert_element_type", "transpose", "copy"})
+_CALL_PRIMS = ("pjit", "closed_call", "core_call", "remat", "custom_jvp_call",
+               "custom_vjp_call", "custom_vjp_call_jaxpr")
+
+
+def device_op_count(fn: Callable, *args) -> int:
+    """Number of non-metadata primitive applications ``fn`` lowers to —
+    the per-EXPAND "device op" figure in ``bench_expand_kernel``.  Call
+    wrappers (pjit etc.) are descended into; a ``pallas_call`` counts as
+    ONE op (its inner jaxpr is a single fused launch)."""
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in _CALL_PRIMS:
+                sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                if sub is not None:
+                    n += walk(getattr(sub, "jaxpr", sub))
+                    continue
+            if name in _METADATA_PRIMS:
+                continue
+            n += 1
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)

@@ -67,14 +67,10 @@ def random_acyclic_query(k: int, seed: int) -> CQ:
 
 def zipf_graph_db(nv: int, ne: int, a: float, seed: int) -> Database:
     """Graph with Zipf-distributed endpoint popularity (hot vertices make
-    adhesion keys recur — the row-block cache's target regime)."""
-    rng = np.random.default_rng(seed)
-    ranks = np.arange(1, nv + 1, dtype=np.float64)
-    p = ranks ** (-a)
-    p /= p.sum()
-    edges = np.stack([rng.choice(nv, size=ne, p=p),
-                      rng.choice(nv, size=ne, p=p)], axis=1)
-    return graph_db(edges)
+    adhesion keys recur — the row-block cache's target regime); the skew
+    source is shared with the benchmarks (``data.graphs.zipf_graph``)."""
+    from repro.data.graphs import zipf_graph
+    return graph_db(zipf_graph(nv, ne, a, seed=seed))
 
 
 ZOO = [
@@ -268,6 +264,41 @@ def test_zoo_evaluate_with_row_block_caching(zoo_dbs, cname, cfg):
             assert got == want, f"{qname}/{cname} run {run}"
             assert rows.shape[0] == len(got), \
                 f"{qname}/{cname} run {run}: duplicate rows"
+
+
+@pytest.mark.tier1
+@pytest.mark.pallas
+@pytest.mark.parametrize("ek", ["xla", "pallas"])
+def test_zoo_expand_kernel_forced_each_way(zoo_dbs, ek):
+    """The whole randomized zoo with the EXPAND kernel forced to each
+    registry path (the fused Pallas kernel runs through the interpreter
+    on CPU): counts and materialized tuple sets must equal the host
+    CLFTJ oracle, and the stats must show that the forced path — and
+    only the forced path — actually ran.  One payload-cache config rides
+    along so splice/replay composes with the fused kernel too."""
+    db = zoo_dbs[0]
+    pay = CacheConfig(policy="setassoc", slots=128, assoc=4,
+                      cache_payloads=True, payload_rows=1 << 12)
+    other = "pallas" if ek == "xla" else "xla"
+    for qname, q in ZOO:
+        td, order = choose_plan(q, db.stats())
+        want_n = clftj_count(q, td, order, db)
+        want = _tuple_set(clftj_evaluate(q, td, order, db), order,
+                          q.variables)
+        eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 8,
+                                expand_kernel=ek)
+        assert eng.count() == want_n, f"{qname} count under {ek}"
+        assert eng.stats[f"expand_calls_{ek}"] > 0
+        assert eng.stats[f"expand_calls_{other}"] == 0
+        rows = jax_clftj_evaluate(q, td, order, db, capacity=1 << 8,
+                                  expand_kernel=ek)
+        got = _tuple_set(rows.tolist(), order, q.variables)
+        assert got == want and rows.shape[0] == len(got), \
+            f"{qname} evaluate under {ek}"
+        rows_p = jax_clftj_evaluate(q, td, order, db, capacity=1 << 8,
+                                    cache=pay, expand_kernel=ek)
+        assert _tuple_set(rows_p.tolist(), order, q.variables) == want, \
+            f"{qname} payload evaluate under {ek}"
 
 
 @pytest.mark.tier1

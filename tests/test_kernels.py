@@ -1,14 +1,17 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
-(interpret mode on CPU; see DESIGN.md §2 for the TPU tiling rationale)."""
+(interpret mode on CPU; see DESIGN.md §2 for the TPU tiling rationale).
+Bounded search goes through the kernel registry — the single entry-point
+convention (the former ``kernels/leapfrog/ops.py`` facade)."""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.leapfrog import ops as lf_ops
+from repro.kernels import registry
 from repro.kernels.flash_attention import ops as fa_ops
 
 
+@pytest.mark.pallas
 @pytest.mark.parametrize("n,m", [(0, 4), (1, 1), (7, 5), (100, 64),
                                  (1000, 513), (4096, 700)])
 @pytest.mark.parametrize("dtype", [np.int32, np.int64])
@@ -23,10 +26,10 @@ def test_leapfrog_bounds_sweep(n, m, dtype):
     want_u = np.array([lo[i] + np.searchsorted(col[lo[i]:hi[i]], v[i],
                                                "right") for i in range(m)])
     for impl in ("bsearch", "pallas", "ref"):
-        got_l = np.asarray(lf_ops.lower_bound(
+        got_l = np.asarray(registry.lower_bound(
             jnp.asarray(col), jnp.asarray(v), jnp.asarray(lo),
             jnp.asarray(hi), impl=impl))
-        got_u = np.asarray(lf_ops.upper_bound(
+        got_u = np.asarray(registry.upper_bound(
             jnp.asarray(col), jnp.asarray(v), jnp.asarray(lo),
             jnp.asarray(hi), impl=impl))
         np.testing.assert_array_equal(got_l, want_l, err_msg=impl)

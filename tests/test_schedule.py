@@ -106,35 +106,28 @@ def test_executor_count_matches_reference_on_nested_td(db):
         assert eng.count() == want
 
 
-# -- deprecation shims ------------------------------------------------------
+# -- the removed cache_slots shim stays removed -----------------------------
 
-def test_cache_slots_deprecated_everywhere(db):
+def test_cache_slots_shim_removed_everywhere(db):
+    """PR 2 deprecated the legacy ``cache_slots`` int for one release;
+    the shim is now deleted end-to-end — every entry point rejects the
+    parameter outright, and ``cache=CacheConfig(...)`` is the only
+    tier-2 configuration surface."""
     q = cycle_query(4)
     td, order = choose_plan(q, db.stats())
-    want = lftj_count(q, order, db)
-    with pytest.warns(DeprecationWarning, match="cache_slots"):
-        eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9,
-                                cache_slots=64)
-    assert eng.count() == want
-    assert eng.cache_config.policy == "direct"
-    assert eng.cache_config.slots == 64
-    with pytest.warns(DeprecationWarning, match="cache_slots"):
-        assert jax_clftj_count(q, td, order, db, capacity=1 << 9,
-                               cache_slots=64) == want
-    with pytest.warns(DeprecationWarning, match="cache_slots"):
-        res = engine.count(q, db, td=td, order=order, capacity=1 << 9,
-                           cache_slots=64)
-    assert res.count == want
-
-
-def test_cache_config_wins_over_legacy_slots(db):
-    """An explicit CacheConfig must not be overridden by the shim."""
-    q = cycle_query(4)
-    td, order = choose_plan(q, db.stats())
-    cfg = CacheConfig(policy="setassoc", slots=32, assoc=4)
-    with pytest.warns(DeprecationWarning):
-        eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9,
-                                cache_slots=1 << 12, cache=cfg)
+    with pytest.raises(TypeError, match="cache_slots"):
+        JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9, cache_slots=64)
+    with pytest.raises(TypeError, match="cache_slots"):
+        jax_clftj_count(q, td, order, db, capacity=1 << 9, cache_slots=64)
+    with pytest.raises(TypeError, match="cache_slots"):
+        engine.count(q, db, td=td, order=order, cache_slots=64)
+    from repro.core.distributed import make_distributed_count
+    with pytest.raises(TypeError, match="cache_slots"):
+        make_distributed_count(q, td, order, db, mesh=None, cache_slots=64)
+    # the replacement surface still works
+    cfg = CacheConfig(policy="direct", slots=64)
+    eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 9, cache=cfg)
+    assert eng.count() == lftj_count(q, order, db)
     assert eng.cache_config is cfg
 
 
