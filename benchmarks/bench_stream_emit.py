@@ -1,0 +1,121 @@
+"""Streaming async EMIT vs one-shot drain (DESIGN.md §2.8).
+
+Three sections, all on small recurring-bag workloads so the module doubles
+as the CI bench-smoke config (``scripts/verify.sh --bench-smoke`` runs
+exactly this module and schema-checks the emitted JSON):
+
+* ``stream/host`` — host-executor evaluation of the bowtie + 4-zigzag
+  queries, one-shot ``evaluate()`` vs ``evaluate_stream()`` (warm jit,
+  payload cache on): wall time, block count, and the async-queue
+  high-water mark.  On CPU the two are expected to be close — the number
+  that transfers to an accelerator is the overlap structure (copies
+  issued per block instead of one pass-end drain), which the record pins
+  via ``async_issues``/``blocking_syncs``.
+* ``stream/static`` — trace-time ``StaticCLFTJ.evaluate_static`` cold
+  then warm (tables round-tripped): the warm pass must report
+  ``tier2_replay_hits > 0`` (payload splice in the static executor).
+* ``stream/facade`` — ``engine.evaluate_stream`` end-to-end with the
+  Result totals check riding in the derived column.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CacheConfig, SyncCounter, bowtie_query, choose_plan
+from repro.core import engine
+from repro.core.cached_frontier import JaxCachedTrieJoin
+from repro.core.cq import cycle_query
+from repro.core.db import graph_db
+from repro.core.distributed import StaticCLFTJ
+
+from .common import emit
+
+
+def _zipf_db(nv=30, ne=300, a=1.1, seed=47):
+    from repro.data.graphs import zipf_graph
+    return graph_db(zipf_graph(nv, ne, a, seed=seed))
+
+
+_PAY = CacheConfig(policy="setassoc", slots=256, assoc=4,
+                   cache_payloads=True, payload_rows=1 << 14)
+
+
+def host_stream_section(db) -> None:
+    for qname, q in [("bowtie", bowtie_query()), ("zigzag4", cycle_query(4))]:
+        td, order = choose_plan(q, db.stats())
+        eng = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 10,
+                                cache=_PAY)
+        n_warm = sum(b.shape[0] for b in eng.evaluate())  # jit warm-up pass
+        t0 = time.perf_counter()
+        n_one = sum(b.shape[0] for b in eng.evaluate())
+        dt_one = time.perf_counter() - t0
+        with SyncCounter() as sc:
+            t0 = time.perf_counter()
+            blocks = list(eng.evaluate_stream())
+            dt_st = time.perf_counter() - t0
+        n_st = sum(b.shape[0] for b in blocks)
+        ex = eng.last_executor
+        qx = ex.emit_queue
+        assert n_st == n_one == n_warm, (n_st, n_one, n_warm)
+        emit(f"stream/host/{qname}", dt_st * 1e6,
+             f"count={n_st};blocks={len(blocks)};one_shot_s={dt_one:.4f};"
+             f"async_issues={sc.async_count};blocking_syncs={sc.count};"
+             f"high_water={qx.high_water}",
+             record={"kind": "stream-host", "result": n_st,
+                     "seconds": dt_st, "one_shot_seconds": dt_one,
+                     "blocks": len(blocks),
+                     "emitted_blocks": ex.emitted_blocks,
+                     "queue_high_water": qx.high_water,
+                     "queue_issued": qx.issued,
+                     "async_issues": sc.async_count,
+                     "blocking_syncs": sc.count,
+                     "replay_hits": eng.stats["tier2_replay_hits"]})
+
+
+def static_stream_section(db) -> None:
+    q = bowtie_query()
+    td, order = choose_plan(q, db.stats())
+    eng = StaticCLFTJ(q, td, order, db, capacity=1 << 14, cache=_PAY)
+    t0 = time.perf_counter()
+    rows, stats, tables = eng.evaluate_static()
+    dt_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rows2, stats2, _ = eng.evaluate_static(tables)
+    dt_warm = time.perf_counter() - t0
+    assert rows.shape == rows2.shape, (rows.shape, rows2.shape)
+    assert not stats["overflow"] and not stats2["overflow"], (stats, stats2)
+    assert stats2["count"] == stats["count"], (stats, stats2)
+    emit("stream/static/bowtie", dt_warm * 1e6,
+         f"count={stats2['count']};replay_hits={stats2['tier2_replay_hits']};"
+         f"cold_s={dt_cold:.4f}",
+         record={"kind": "stream-static", "result": stats2["count"],
+                 "seconds": dt_warm, "cold_seconds": dt_cold,
+                 "replay_hits": stats2["tier2_replay_hits"],
+                 "overflow": stats2["overflow"]})
+
+
+def facade_section(db) -> None:
+    q = cycle_query(4)
+    rs = engine.evaluate_stream(q, db, capacity=1 << 10, cache=_PAY)
+    n = sum(b.shape[0] for b in rs)
+    res = rs.result
+    ok = res is not None and res.count == n
+    emit("stream/facade/zigzag4", res.exec_s * 1e6,
+         f"count={n};totals_ok={ok};plan_s={res.plan_s:.4f};"
+         f"compile_s={res.compile_s:.4f};exec_s={res.exec_s:.4f}",
+         record={"kind": "stream-facade", "result": n, "totals_ok": ok,
+                 "seconds": res.wall_s, "plan_s": res.plan_s,
+                 "compile_s": res.compile_s, "exec_s": res.exec_s})
+
+
+def main() -> None:
+    db = _zipf_db()
+    host_stream_section(db)
+    static_stream_section(db)
+    facade_section(db)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,7 +26,7 @@ MODULES = [
     "bench_count_queries", "bench_path_scaling", "bench_cycle_scaling",
     "bench_eval_queries", "bench_cache_size", "bench_cache_structure",
     "bench_td_skew", "bench_engine_backends", "bench_expand_kernel",
-    "bench_lm_step",
+    "bench_stream_emit", "bench_lm_step",
 ]
 
 

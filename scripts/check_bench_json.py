@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Schema check for ``BENCH_*.json`` perf records (CI bench-smoke gate).
+
+``benchmarks/run.py --json`` is the repo's perf-trajectory writer; if its
+record shape rots silently, every committed ``BENCH_<date>.json`` after
+that is garbage.  This validator pins the contract (stdlib-only — no
+jsonschema dependency in CI):
+
+* top level: ``date`` (ISO day), ``modules`` (non-empty str list),
+  ``platform``/``jax``/``backend`` (str), ``errors`` (list — must be
+  EMPTY in strict mode: a module that crashed mid-bench is a failed
+  gate, not a data point), ``rows`` (non-empty record list);
+* every row: ``name`` (str), ``us_per_call`` (finite number >= 0),
+  ``derived`` (str), plus free-form typed extras.
+
+Usage: ``check_bench_json.py PATH [--allow-errors]`` — exit 0 iff valid.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+import sys
+from typing import List
+
+DATE_RE = re.compile(r"^\d{4}-\d{2}-\d{2}$")
+TOP_KEYS = {"date", "modules", "platform", "jax", "backend", "errors",
+            "rows"}
+
+
+def validate(payload: object, allow_errors: bool = False) -> List[str]:
+    """Returns a list of violations (empty = valid)."""
+    bad: List[str] = []
+    if not isinstance(payload, dict):
+        return [f"top level must be an object, got {type(payload).__name__}"]
+    missing = TOP_KEYS - set(payload)
+    if missing:
+        bad.append(f"missing top-level keys: {sorted(missing)}")
+        return bad
+    if not (isinstance(payload["date"], str)
+            and DATE_RE.match(payload["date"])):
+        bad.append(f"date must be YYYY-MM-DD, got {payload['date']!r}")
+    if not (isinstance(payload["modules"], list) and payload["modules"]
+            and all(isinstance(m, str) for m in payload["modules"])):
+        bad.append("modules must be a non-empty list of strings")
+    for k in ("platform", "jax", "backend"):
+        if not isinstance(payload[k], str) or not payload[k]:
+            bad.append(f"{k} must be a non-empty string")
+    if not isinstance(payload["errors"], list):
+        bad.append("errors must be a list")
+    elif payload["errors"] and not allow_errors:
+        bad.append(f"bench modules raised: {payload['errors']}")
+    rows = payload["rows"]
+    if not (isinstance(rows, list) and rows):
+        bad.append("rows must be a non-empty list")
+        return bad
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            bad.append(f"rows[{i}] must be an object")
+            continue
+        if not isinstance(row.get("name"), str) or not row.get("name"):
+            bad.append(f"rows[{i}].name must be a non-empty string")
+        us = row.get("us_per_call")
+        if not isinstance(us, (int, float)) or isinstance(us, bool) \
+                or not math.isfinite(us) or us < 0:
+            bad.append(f"rows[{i}].us_per_call must be a finite number "
+                       f">= 0, got {us!r}")
+        if not isinstance(row.get("derived"), str):
+            bad.append(f"rows[{i}].derived must be a string")
+    return bad
+
+
+def main(argv: List[str]) -> int:
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return 2
+    path = argv[0]
+    allow_errors = "--allow-errors" in argv[1:]
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"FAIL {path}: unreadable ({e})")
+        return 1
+    bad = validate(payload, allow_errors=allow_errors)
+    if bad:
+        for b in bad:
+            print(f"FAIL {path}: {b}")
+        return 1
+    print(f"OK {path}: {len(payload['rows'])} rows from "
+          f"{len(payload['modules'])} modules on {payload['backend']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

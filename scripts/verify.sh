@@ -1,16 +1,31 @@
 #!/usr/bin/env bash
-# Tier-1 verify: the ROADMAP command, minus the slow-marked sweeps.
+# Tiered verify: the ROADMAP command, minus the slow-marked sweeps.
+# CI (.github/workflows/ci.yml) runs these SAME tiers — one command per
+# job, so local pre-flight and the gate can never drift.
 # Usage: scripts/verify.sh [extra pytest args]
-#   scripts/verify.sh -m tier1     # quick pre-flight (core invariants only)
-#   scripts/verify.sh --pallas     # kernel-parity tier only: the fused
-#                                  # Pallas kernels through the interpreter
-#                                  # on CPU — tier-1 never needs an
-#                                  # accelerator (DESIGN.md §2.7)
+#   scripts/verify.sh -m tier1       # quick pre-flight (core invariants only)
+#   scripts/verify.sh --pallas       # kernel-parity tier only: the fused
+#                                    # Pallas kernels through the interpreter
+#                                    # on CPU — tier-1 never needs an
+#                                    # accelerator (DESIGN.md §2.7)
+#   scripts/verify.sh --bench-smoke  # bench-record gate: run the tiny
+#                                    # streaming-emit bench config with
+#                                    # --json and schema-check the emitted
+#                                    # record (scripts/check_bench_json.py)
+#                                    # so BENCH_*.json can't silently rot
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "${1:-}" = "--pallas" ]; then
     shift
     exec python -m pytest -x -q -m pallas "$@"
+fi
+if [ "${1:-}" = "--bench-smoke" ]; then
+    shift
+    out="$(mktemp -t bench_smoke_XXXXXX.json)"
+    trap 'rm -f "$out"' EXIT
+    python -m benchmarks.run --only stream_emit --json "$out" "$@"
+    python scripts/check_bench_json.py "$out"
+    exit 0  # set -e already exited on failure; don't fall through to pytest
 fi
 exec python -m pytest -x -q -m "not slow" "$@"

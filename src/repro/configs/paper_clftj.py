@@ -35,6 +35,7 @@ class JoinEngineConfig:
     dedup: bool = True             # tier-1 intra-chunk dedup
     impl: str = "bsearch"          # bsearch | pallas (bounded-search flavor)
     expand_kernel: str = "auto"    # auto | pallas | xla (DESIGN.md §2.7)
+    emit_in_flight: int = 8        # streaming-emit async-copy bound (§2.8)
 
     def cache_config(self) -> CacheConfig:
         """Tier-2 device-cache config for the vectorized engine."""
@@ -63,3 +64,9 @@ TPU_EVAL_REPLAY = JoinEngineConfig(   # §3.4 evaluation: replay-on-hit
     cache_payloads=True, payload_rows=1 << 17)
 TPU_FUSED_EXPAND = JoinEngineConfig(  # single-launch EXPAND (DESIGN §2.7)
     expand_kernel="pallas")
+TPU_STREAM_EMIT = JoinEngineConfig(   # §2.8 streaming evaluation: replay-
+    # capable tier 2 + a deeper async-emit window (result blocks stream
+    # while the next morsel expands; raise the bound when result blocks
+    # are small relative to device memory)
+    cache_policy="setassoc", cache_assoc=8, cache_slots=1 << 14,
+    cache_payloads=True, payload_rows=1 << 17, emit_in_flight=16)

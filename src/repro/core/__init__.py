@@ -18,7 +18,8 @@ from .lftj_ref import LFTJ, lftj_count, lftj_evaluate
 from .clftj_ref import clftj_count, clftj_evaluate
 from .yannakakis import YTD, ytd_count, ytd_evaluate
 from .cache import CacheConfig, CacheManager, DeviceCache
-from .hostsync import SyncCounter
+from .hostsync import (AsyncFetch, AsyncFetchQueue, SyncCounter,
+                       device_get_async)
 from .schedule import Op, Schedule, ScheduleExecutor, lower
 from .frontier import JaxTrieJoin, jax_lftj_count, jax_lftj_evaluate
 from .cached_frontier import (JaxCachedTrieJoin, jax_clftj_count,

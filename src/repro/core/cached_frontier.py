@@ -81,9 +81,10 @@ class JaxCachedTrieJoin(JaxTrieJoin):
                  impl: str = "bsearch",
                  cached_nodes: Optional[frozenset] = None,
                  cache: Optional[CacheConfig] = None,
-                 expand_kernel: str = "auto"):
+                 expand_kernel: str = "auto", emit_in_flight: int = 8):
         super().__init__(q, order, db, capacity=capacity, impl=impl,
-                         expand_kernel=expand_kernel)
+                         expand_kernel=expand_kernel,
+                         emit_in_flight=emit_in_flight)
         self.plan = Plan.build(td, order)
         self.td = td
         cache = _resolve_cache_config(cache, cached_nodes,
@@ -172,6 +173,25 @@ class JaxCachedTrieJoin(JaxTrieJoin):
             self.last_executor = ex
             yield from ex.evaluate()
             self._finalize(ex)
+
+    def evaluate_stream(self) -> Iterator[np.ndarray]:
+        """Streaming evaluation (DESIGN.md §2.8): identical blocks, in the
+        same order, as :meth:`evaluate`, but each block's device→host copy
+        is issued asynchronously as it is produced — bounded by
+        ``emit_in_flight`` — so copies overlap the next morsel's EXPAND
+        instead of draining at pass end.  All tier-2 behavior (payload
+        probe/splice/store) is unchanged: streaming only moves the output
+        data plane."""
+        with enable_x64():
+            ex = ScheduleExecutor(self, mode="evaluate")
+            self.last_executor = ex
+            try:
+                yield from ex.evaluate_stream()
+            finally:
+                # a stream abandoned early (break / close) must still
+                # fold whatever the executor did complete into stats —
+                # stale previous-pass counters would read as current
+                self._finalize(ex)
 
 
 def jax_clftj_count(q: CQ, td: TreeDecomposition, order: Sequence[str],

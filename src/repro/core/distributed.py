@@ -10,10 +10,19 @@ top-level variable's candidate runs (the natural LFTJ work partition — see
 DESIGN.md §3), keeps a private cache (caching is an optimization, never a
 correctness requirement, so no coherence traffic), and the only collective
 is the final count psum.
+
+Evaluation (DESIGN.md §2.8) runs the same pure schedule in materialization
+mode with **payload-capable** tier-2 tables: each shard keeps a private
+slab arena (the §2.6 row-block region, bump pointer threaded as a traced
+scalar), splices its own payload hits shard-locally, and returns its
+result chunk; the host merges the per-shard ``(assign, valid)`` blocks —
+no result collective.  Tables round-trip through
+:func:`make_distributed_evaluate`'s returned callable, so a second pass
+over the same (or an overlapping) workload serves tier-2 replay hits.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,7 +37,8 @@ from .cached_frontier import JaxCachedTrieJoin, _resolve_cache_config
 from .cq import CQ
 from .db import Database
 from .frontier import Frontier
-from .schedule import execute_static
+from .hostsync import device_get
+from .schedule import FOLD_CHILD, execute_static
 from .td import TreeDecomposition
 
 
@@ -42,24 +52,119 @@ class StaticCLFTJ(JaxCachedTrieJoin):
     ``schedule.execute_static`` instead of a third recursion copy."""
 
     # -----------------------------------------------------------------
+    def make_tables(self, mode: str = "count") -> Dict[int, tuple]:
+        """Fresh functional tier-2 tables for every probed TD node: the
+        count-only 5-tuple, or — ``mode="evaluate"`` with
+        ``cache_payloads`` — the 9-tuple with the §2.6 payload region
+        (metadata planes, slab arena sized to the node's subtree width,
+        traced bump pointer)."""
+        cfg = self.cache_config
+        if cfg.initial_slots() <= 0:
+            return {}
+        w = cfg.ways
+        s = max(1, cfg.initial_slots() // w)
+        tables: Dict[int, tuple] = {}
+        for op in self.schedule.ops:
+            if op.kind != FOLD_CHILD or not op.probe or op.node in tables:
+                continue
+            base = (jnp.zeros((s, w), jnp.int64),
+                    jnp.zeros((s, w), jnp.int64),
+                    jnp.zeros((s, w), bool),
+                    jnp.zeros((s, w), jnp.int32),
+                    jnp.zeros((s, w), jnp.int64))
+            if mode == "evaluate" and cfg.cache_payloads:
+                width = op.sub_last - op.sub_first + 1
+                tables[op.node] = base + (
+                    jnp.zeros((s, w), jnp.int32),
+                    jnp.full((s, w), -1, jnp.int32),
+                    jnp.zeros((int(cfg.payload_rows) + 1, width),
+                              jnp.int32),
+                    jnp.zeros((), jnp.int32))
+            else:
+                tables[op.node] = base
+        return tables
+
     def count_fn(self):
         """Returns a pure fn(frontier0) -> (count, overflow)."""
         cfg = self.cache_config
-        n_sets = max(1, cfg.initial_slots() // cfg.ways)
 
         def fn(F0: Frontier):
-            tables = {c: (jnp.zeros((n_sets, cfg.ways), jnp.int64),
-                          jnp.zeros((n_sets, cfg.ways), jnp.int64),
-                          jnp.zeros((n_sets, cfg.ways), bool),
-                          jnp.zeros((n_sets, cfg.ways), jnp.int32),
-                          jnp.zeros((n_sets, cfg.ways), jnp.int64))
-                      for c in range(self.td.num_nodes)
-                      if cfg.initial_slots() > 0 and self._node_cacheable(c)}
-            total, ov, _ = execute_static(self.schedule, self, F0, tables,
-                                          cfg)
+            total, ov, _ = execute_static(self.schedule, self, F0,
+                                          self.make_tables("count"), cfg)
             return total, ov
 
         return fn
+
+    def evaluate_fn(self):
+        """Returns a pure fn(frontier0, tables) -> (assign, valid, count,
+        overflow, replay_hits, tables) — the payload-capable trace-time
+        evaluation of the lowered schedule (DESIGN.md §2.8)."""
+        cfg = self.cache_config
+
+        def fn(F0: Frontier, tables: Dict[int, tuple]):
+            return execute_static(self.schedule, self, F0, tables, cfg,
+                                  mode="evaluate")
+
+        return fn
+
+    def evaluate_static(self, tables: Optional[Dict[int, tuple]] = None):
+        """Single-device trace-time evaluation with tier-2 payloads.
+
+        Returns ``(rows, stats, tables)`` — rows the materialized (N, n)
+        int32 result, ``stats`` with ``count``/``overflow``/
+        ``tier2_replay_hits``, and the updated functional tables to pass
+        back in for a warm pass (recurring adhesion keys then splice from
+        the slab instead of re-expanding)."""
+        with enable_x64():
+            if tables is None:
+                tables = self.make_tables("evaluate")
+            F0 = self.initial_frontier()
+            assign, valid, total, ov, hits, tables = self.evaluate_fn()(
+                F0, tables)
+            a, v, t, o, h = device_get((assign, valid, total, ov, hits),
+                                       "static-eval")
+        rows = np.asarray(a)[np.asarray(v)]
+        stats = {"count": int(t), "overflow": bool(o),
+                 "tier2_replay_hits": int(h)}
+        return rows, stats, tables
+
+
+class _GuardPartition:
+    """The top-level work partition shared by every distributed entry
+    point: shard i of D takes guard runs [i·R/D, (i+1)·R/D) — the lo/hi
+    math must stay byte-identical between count and evaluate, or the two
+    would shard different row ranges."""
+
+    def __init__(self, eng: StaticCLFTJ, mesh: Mesh,
+                 axes: Tuple[str, ...]):
+        self.eng = eng
+        self.mesh = mesh
+        g_ai, g_lvl = eng.at_depth[0][eng.guard[0]]
+        self.g_ai = g_ai
+        self.rs = eng.levels[g_ai][g_lvl].runstarts
+        self.nruns = self.rs.shape[0]
+        self.n_rows_g = eng.sizes[g_ai]
+        self.all_axes = tuple(a for a in axes if a in mesh.axis_names)
+        self.d_total = int(np.prod([mesh.shape[a] for a in self.all_axes]))
+
+    def shard_frontier(self) -> Frontier:
+        """This shard's initial frontier (call inside the shard body)."""
+        idx = jnp.zeros((), jnp.int32)
+        mult = 1
+        for a in reversed(self.all_axes):
+            idx = idx + jax.lax.axis_index(a) * mult
+            mult *= self.mesh.shape[a]
+        r0 = (idx * self.nruns) // self.d_total
+        r1 = ((idx + 1) * self.nruns) // self.d_total
+        lo0 = jnp.where(r0 < self.nruns,
+                        self.rs[jnp.clip(r0, 0, self.nruns - 1)],
+                        self.n_rows_g).astype(jnp.int32)
+        hi0 = jnp.where(r1 < self.nruns,
+                        self.rs[jnp.clip(r1, 0, self.nruns - 1)],
+                        self.n_rows_g).astype(jnp.int32)
+        F0 = self.eng.initial_frontier()
+        return F0._replace(lo=F0.lo.at[0, self.g_ai].set(lo0),
+                           hi=F0.hi.at[0, self.g_ai].set(hi0))
 
 
 def make_distributed_count(q: CQ, td: TreeDecomposition,
@@ -79,39 +184,99 @@ def make_distributed_count(q: CQ, td: TreeDecomposition,
     cache = _resolve_cache_config(cache, None, default_slots=1 << 15)
     eng = StaticCLFTJ(q, td, order, db, capacity=capacity, cache=cache,
                       expand_kernel=expand_kernel)
-    g_ai, g_lvl = eng.at_depth[0][eng.guard[0]]
-    rs = eng.levels[g_ai][g_lvl].runstarts
-    nruns = rs.shape[0]
-    n_rows_g = eng.sizes[g_ai]
+    part = _GuardPartition(eng, mesh, axes)
     count_fn = eng.count_fn()
-    all_axes = tuple(a for a in axes if a in mesh.axis_names)
-    d_total = int(np.prod([mesh.shape[a] for a in all_axes]))
 
     def per_shard():
         with enable_x64():
-            idx = jnp.zeros((), jnp.int32)
-            mult = 1
-            for a in reversed(all_axes):
-                idx = idx + jax.lax.axis_index(a) * mult
-                mult *= mesh.shape[a]
-            r0 = (idx * nruns) // d_total
-            r1 = ((idx + 1) * nruns) // d_total
-            lo0 = jnp.where(r0 < nruns, rs[jnp.clip(r0, 0, nruns - 1)],
-                            n_rows_g).astype(jnp.int32)
-            hi0 = jnp.where(r1 < nruns, rs[jnp.clip(r1, 0, nruns - 1)],
-                            n_rows_g).astype(jnp.int32)
-            F0 = eng.initial_frontier()
-            F0 = F0._replace(
-                lo=F0.lo.at[0, g_ai].set(lo0),
-                hi=F0.hi.at[0, g_ai].set(hi0))
-            total, ov = count_fn(F0)
-            total = jax.lax.psum(total, all_axes)
-            ov = jax.lax.psum(ov.astype(jnp.int32), all_axes)
+            total, ov = count_fn(part.shard_frontier())
+            total = jax.lax.psum(total, part.all_axes)
+            ov = jax.lax.psum(ov.astype(jnp.int32), part.all_axes)
             return total, ov
 
     fn = shard_map(per_shard, mesh=mesh, in_specs=(),
                    out_specs=(P(), P()), check_rep=False)
     return _X64Jit(fn), eng
+
+
+def make_distributed_evaluate(q: CQ, td: TreeDecomposition,
+                              order: Sequence[str], db: Database, mesh: Mesh,
+                              capacity: int = 1 << 14,
+                              axes: Tuple[str, ...] = ("data",),
+                              cache: Optional[CacheConfig] = None,
+                              expand_kernel: str = "auto"):
+    """Build (eval_fn, engine) for payload-capable distributed evaluation.
+
+    ``eval_fn(tables=None)`` runs one materialization pass over the mesh
+    and returns ``(rows, stats, tables)``: each shard evaluates its guard-
+    run slice through the static schedule with a *private* payload-capable
+    tier-2 table + slab arena (shard-local splice, no coherence traffic),
+    the host concatenates the per-shard ``(assign, valid)`` result chunks
+    (the host-side merge — there is no result collective; count/overflow/
+    replay-hit scalars are the only psums).  Tables are stacked on a
+    leading shard axis and round-trip: pass the returned ``tables`` back
+    in and recurring adhesion keys are served by slab splice
+    (``stats["tier2_replay_hits"] > 0``) instead of re-expansion.
+    Replay requires ``cache_payloads=True`` — the default here (unlike
+    the count factory): an explicit payloads-off config still evaluates
+    exactly, but its tables are count-only and every probe misses.
+    """
+    if cache is None:
+        cache = CacheConfig(policy="direct", slots=1 << 15,
+                            cache_payloads=True)
+    cache = _resolve_cache_config(cache, None, default_slots=1 << 15)
+    eng = StaticCLFTJ(q, td, order, db, capacity=capacity, cache=cache,
+                      expand_kernel=expand_kernel)
+    part = _GuardPartition(eng, mesh, axes)
+    d_total = part.d_total
+    eval_fn = eng.evaluate_fn()
+    spec = P(part.all_axes)
+    with enable_x64():
+        template = eng.make_tables("evaluate")
+    table_specs = jax.tree.map(lambda _: spec, template)
+
+    def init_tables():
+        with enable_x64():
+            # stack the spec template itself — building a second full
+            # table set (slab arenas included) just to throw it away
+            # would double the allocation per factory call
+            return jax.tree.map(
+                lambda x: jnp.repeat(x[None], d_total, axis=0), template)
+
+    def per_shard(tables):
+        with enable_x64():
+            local = jax.tree.map(lambda x: x[0], tables)
+            assign, valid, total, ov, hits, local = eval_fn(
+                part.shard_frontier(), local)
+            total = jax.lax.psum(total, part.all_axes)
+            ov = jax.lax.psum(ov.astype(jnp.int32), part.all_axes)
+            hits = jax.lax.psum(hits, part.all_axes)
+            return (assign[None], valid[None], total, ov, hits,
+                    jax.tree.map(lambda x: x[None], local))
+
+    fn = _X64Jit(shard_map(
+        per_shard, mesh=mesh, in_specs=(table_specs,),
+        out_specs=(spec, spec, P(), P(), P(), table_specs),
+        check_rep=False))
+
+    def run(tables: Optional[Dict[int, tuple]] = None):
+        if tables is None:
+            tables = init_tables()
+        with mesh:
+            assign, valid, total, ov, hits, tables = fn(tables)
+        a, v, t, o, h = device_get((assign, valid, total, ov, hits),
+                                   "dist-eval-rows")
+        a, v = np.asarray(a), np.asarray(v)
+        rows = np.concatenate([a[i][v[i]] for i in range(a.shape[0])],
+                              axis=0) if a.shape[0] else \
+            np.zeros((0, len(eng.order)), np.int32)
+        # "overflow" is a bool on every evaluation surface
+        # (evaluate_static included); the shard count rides separately
+        stats = {"count": int(t), "overflow": bool(o),
+                 "overflow_shards": int(o), "tier2_replay_hits": int(h)}
+        return rows, stats, tables
+
+    return run, eng
 
 
 class _X64Jit:

@@ -17,7 +17,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -242,3 +242,74 @@ def evaluate(q: CQ, db: Database, algorithm: str = "clftj",
                   counters=counters_out,
                   wall_s=t2 - t0, plan_s=t1 - t0, compile_s=cc.total,
                   exec_s=max(0.0, (t2 - t1) - cc.total))
+
+
+@dataclass
+class ResultStream:
+    """The streaming-evaluation surface (DESIGN.md §2.8): iterate to
+    receive (k, n) int32 result morsels in arrival order; once exhausted,
+    ``result`` holds the :class:`Result` with the exact one-shot count
+    and counters and ``tuples=None`` — the rows were already streamed.
+    Timing caveat: the stream is consumer-driven, so ``exec_s``/
+    ``wall_s`` span the whole drain *including time the consumer spends
+    between morsels* — comparable to one-shot numbers only when the
+    consumer iterates promptly."""
+
+    order: Tuple[str, ...]
+    _gen: Iterator[np.ndarray] = field(repr=False)
+    result: Optional[Result] = None
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        return self._gen
+
+
+def evaluate_stream(q: CQ, db: Database, algorithm: str = "clftj",
+                    backend: str = "jax",
+                    td: Optional[TreeDecomposition] = None,
+                    order: Optional[Sequence[str]] = None,
+                    capacity: int = 1 << 16, impl: str = "bsearch",
+                    dedup: bool = True,
+                    cache: Optional[CacheConfig] = None,
+                    expand_kernel: str = "auto",
+                    emit_in_flight: int = 8) -> ResultStream:
+    """Evaluate ``q`` as a *stream*: returns a :class:`ResultStream` whose
+    iterator yields materialized (k, n) int32 morsels in arrival order —
+    each block's device→host copy issued asynchronously as the executor
+    produces it, at most ``emit_in_flight`` copies in flight — instead of
+    buffering the whole result.  Only the JAX backend streams (the host
+    reference engines have no device→host copy to overlap)."""
+    if backend != "jax" or algorithm not in ("clftj", "lftj"):
+        raise ValueError(
+            f"evaluate_stream supports the JAX clftj/lftj engines only, "
+            f"got algorithm={algorithm!r} backend={backend!r}")
+    t0 = time.perf_counter()
+    td_, order_ = _plan(q, db, td, order)
+    t1 = time.perf_counter()
+    stream = ResultStream(order=order_, _gen=iter(()))
+
+    def _gen() -> Iterator[np.ndarray]:
+        n_rows = 0
+        with _CompileClock() as cc:
+            if algorithm == "clftj":
+                eng = JaxCachedTrieJoin(q, td_, order_, db,
+                                        capacity=capacity, dedup=dedup,
+                                        impl=impl, cache=cache,
+                                        expand_kernel=expand_kernel,
+                                        emit_in_flight=emit_in_flight)
+            else:
+                eng = JaxTrieJoin(q, order_, db, capacity=capacity,
+                                  impl=impl, expand_kernel=expand_kernel,
+                                  emit_in_flight=emit_in_flight)
+            for block in eng.evaluate_stream():
+                n_rows += block.shape[0]
+                yield block
+            counters_out = dict(getattr(eng, "stats", {}) or {})
+        t2 = time.perf_counter()
+        stream.result = Result(
+            count=n_rows, tuples=None, algorithm=algorithm, backend=backend,
+            order=order_, td=td_, counters=counters_out,
+            wall_s=t2 - t0, plan_s=t1 - t0, compile_s=cc.total,
+            exec_s=max(0.0, (t2 - t1) - cc.total))
+
+    stream._gen = _gen()
+    return stream

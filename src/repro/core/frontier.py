@@ -14,9 +14,12 @@ exactly the depth-d partial assignments LFTJ would visit, so worst-case
 optimality is inherited.  The static chunk capacity bounds *device* memory
 per launch (each morsel is one fixed-shape chunk); the executor holds a
 level's morsels on the host side of the schedule pass, so host/heap use
-scales with the widest frontier level — and evaluation mode buffers
-emitted ``(assign, valid)`` blocks until the pass completes (streaming
-them is the ROADMAP's "async emit" follow-on).  A frontier row spliced
+scales with the widest frontier level.  Evaluation mode either buffers
+emitted ``(assign, valid)`` blocks until the pass completes
+(``evaluate()``, one batched drain) or streams them
+(``evaluate_stream()``: each block's device→host copy is issued
+asynchronously as it is produced, bounded by ``emit_in_flight`` —
+DESIGN.md §2.8).  A frontier row spliced
 from the tier-2 payload slab (cached-subtree replay, DESIGN.md §2.6) is
 indistinguishable downstream from one produced by expansion — the cache
 only ever substitutes for recomputation.
@@ -92,7 +95,7 @@ class JaxTrieJoin:
 
     def __init__(self, q: CQ, order: Sequence[str], db: Database,
                  capacity: int = 1 << 17, impl: str = "bsearch",
-                 expand_kernel: str = "auto"):
+                 expand_kernel: str = "auto", emit_in_flight: int = 8):
         if expand_kernel not in kernels.EXPAND_MODES:
             raise ValueError(f"expand_kernel must be one of "
                              f"{kernels.EXPAND_MODES}, got {expand_kernel!r}")
@@ -103,6 +106,9 @@ class JaxTrieJoin:
         self.capacity = int(capacity)
         self.impl = impl
         self.expand_kernel = expand_kernel
+        # streaming-emit bound: max in-flight device→host result-block
+        # copies (DESIGN.md §2.8); consumed by ScheduleExecutor
+        self.emit_in_flight = int(emit_in_flight)
         # depth -> impl the registry resolved for that EXPAND(d)
         self.expand_paths: Dict[int, str] = {}
         pos = {x: i for i, x in enumerate(self.order)}
@@ -301,6 +307,16 @@ class JaxTrieJoin:
             ex = ScheduleExecutor(self, mode="evaluate")
             self.last_executor = ex
             yield from ex.evaluate()
+
+    def evaluate_stream(self) -> Iterator[np.ndarray]:
+        """Streaming evaluation: the same blocks as :meth:`evaluate`, in
+        the same order, with each block's device→host copy issued
+        asynchronously as the block is produced (bounded by
+        ``emit_in_flight``; DESIGN.md §2.8)."""
+        with enable_x64():
+            ex = ScheduleExecutor(self, mode="evaluate")
+            self.last_executor = ex
+            yield from ex.evaluate_stream()
 
 
 def jax_lftj_count(q: CQ, order: Sequence[str], db: Database,

@@ -1,4 +1,4 @@
-"""Deliberate device→host synchronization funnel.
+"""Deliberate device→host synchronization funnel + the async emit queue.
 
 Every host sync on the join-engine hot path goes through :func:`device_get`
 so the cost that used to be invisible (``bool(F.valid.any())`` per chunk,
@@ -6,11 +6,31 @@ so the cost that used to be invisible (``bool(F.valid.any())`` per chunk,
 around a query and assert the executor stays under a fixed budget
 (``tests/test_sync_budget.py``).  The schedule executor batches its
 admission checks so the count is O(ops), not O(chunks).
+
+**Async fetches (DESIGN.md §2.8).**  Evaluation-mode emission used to drain
+every result block with one blocking fetch at pass end — the device idled
+while the host copied.  :func:`device_get_async` instead *issues* the
+device→host copy (``jax.Array.copy_to_host_async``) and returns an
+:class:`AsyncFetch` handle; the copy proceeds in the background while the
+executor keeps launching the next morsel's work.  :class:`AsyncFetchQueue`
+bounds how many fetches may be in flight (device buffers pinned per
+in-flight block) and preserves FIFO arrival order.
+
+Accounting rules (budget-tested):
+
+* ``SyncCounter.count`` counts **blocking** syncs only — the number that
+  must stay O(ops).
+* an async *issue* increments ``SyncCounter.async_count`` and rides
+  ``events``/``label_counts`` under its own label (e.g. ``emit-stream``),
+  so in-flight fetches are visible separately and a test can pin their
+  frequency without conflating them with blocking syncs.
+* *completing* an async fetch (``AsyncFetch.get``) is not a counted event:
+  the copy was issued — and accounted — when the handle was created.
 """
 from __future__ import annotations
 
-from collections import Counter
-from typing import Any, List
+from collections import Counter, deque
+from typing import Any, Deque, Iterator, List
 
 import jax
 
@@ -20,16 +40,21 @@ _active: List["SyncCounter"] = []
 class SyncCounter:
     """Context manager counting device→host syncs made through this funnel.
 
-    ``count`` is the number of :func:`device_get` calls (each call may fetch
-    a whole pytree — that is the point: one batched fetch per op, not one
-    per chunk).  ``events`` records the labels, for diagnosing regressions;
-    ``label_counts`` is the same information aggregated, so budget tests
-    can pin one label's frequency (e.g. the evaluation-mode payload plan
-    must ride the per-fold ``replay-plan`` fetch: O(ops), not O(hits)).
+    ``count`` is the number of blocking :func:`device_get` calls (each call
+    may fetch a whole pytree — that is the point: one batched fetch per op,
+    not one per chunk).  ``async_count`` is the number of
+    :func:`device_get_async` issues (non-blocking; the copy overlaps device
+    work).  ``events`` records the labels of both, for diagnosing
+    regressions; ``label_counts`` is the same information aggregated, so
+    budget tests can pin one label's frequency (e.g. the evaluation-mode
+    payload plan must ride the per-fold ``replay-plan`` fetch — O(ops),
+    not O(hits) — and streaming emission must issue ``emit-stream``
+    fetches asynchronously, never as blocking syncs).
     """
 
     def __init__(self) -> None:
         self.count = 0
+        self.async_count = 0
         self.events: List[str] = []
         self.label_counts: Counter = Counter()
 
@@ -49,3 +74,113 @@ def device_get(tree: Any, label: str = "") -> Any:
         c.events.append(label)
         c.label_counts[label] += 1
     return jax.device_get(tree)
+
+
+# ---------------------------------------------------------------------------
+# Async fetches (streaming emit — DESIGN.md §2.8)
+# ---------------------------------------------------------------------------
+
+
+class AsyncFetch:
+    """Handle for one issued (in-flight) device→host copy of a pytree.
+
+    Created by :func:`device_get_async`; :meth:`get` materializes the host
+    values (fast once the background copy has landed).  Completion is not
+    a counted sync — the fetch was accounted at issue time."""
+
+    __slots__ = ("tree", "label")
+
+    def __init__(self, tree: Any, label: str):
+        self.tree = tree
+        self.label = label
+
+    def ready(self) -> bool:
+        """Best-effort readiness: True once every leaf's *producing
+        computation* has completed (``jax.Array.is_ready``).  The D2H
+        copy issued at creation usually lands with it, but JAX exposes no
+        copy-completion signal, so :meth:`get` may still briefly block on
+        the transfer itself — ``ready()`` is a scheduling hint (used by
+        ``poll`` to avoid obviously-blocking pops), not a no-block
+        guarantee."""
+        for leaf in jax.tree.leaves(self.tree):
+            if isinstance(leaf, jax.Array) and not leaf.is_ready():
+                return False
+        return True
+
+    def get(self) -> Any:
+        return jax.device_get(self.tree)
+
+
+def device_get_async(tree: Any, label: str = "") -> AsyncFetch:
+    """Issue a non-blocking device→host copy of ``tree``.
+
+    Starts ``copy_to_host_async`` on every ``jax.Array`` leaf and returns
+    an :class:`AsyncFetch`.  Counted as an *async* event (see the module
+    docstring's accounting rules): ``SyncCounter.async_count`` and
+    ``label_counts[label]`` advance, ``count`` does not."""
+    for leaf in jax.tree.leaves(tree):
+        if isinstance(leaf, jax.Array):
+            try:
+                leaf.copy_to_host_async()
+            except (NotImplementedError, AttributeError):
+                # backend without D2H async: .get() still works, it just
+                # blocks on the transfer.  Real failures (deleted/donated
+                # buffers, ...) must surface HERE, not at some later
+                # unrelated .get() — so only the unsupported cases pass.
+                pass
+    for c in _active:
+        c.async_count += 1
+        c.events.append(label)
+        c.label_counts[label] += 1
+    return AsyncFetch(tree, label)
+
+
+class AsyncFetchQueue:
+    """Bounded FIFO of in-flight async fetches (the streaming emit queue).
+
+    ``put`` issues a new fetch; when the bound is reached the *oldest*
+    fetch is completed first (back-pressure: at most ``max_in_flight``
+    device blocks are pinned by emission at any moment).  ``poll`` pops
+    fetches whose copies have already landed without blocking; ``drain``
+    completes everything.  All three return host pytrees in issue order,
+    so a consumer that concatenates ``put``/``poll``/``drain`` results
+    sees blocks in exact production order."""
+
+    def __init__(self, max_in_flight: int = 8):
+        if max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
+        self.max_in_flight = int(max_in_flight)
+        self._q: Deque[AsyncFetch] = deque()
+        self.issued = 0
+        self.high_water = 0  # max simultaneous in-flight fetches observed
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._q)
+
+    def put(self, tree: Any, label: str = "") -> List[Any]:
+        """Issue one fetch; returns the host values of any fetches that had
+        to be completed to stay under the in-flight bound (oldest first,
+        possibly empty)."""
+        done: List[Any] = []
+        while len(self._q) >= self.max_in_flight:
+            done.append(self._q.popleft().get())
+        self._q.append(device_get_async(tree, label))
+        self.issued += 1
+        self.high_water = max(self.high_water, len(self._q))
+        return done
+
+    def poll(self) -> List[Any]:
+        """Pop fetches from the head whose producing computation has
+        landed (see :meth:`AsyncFetch.ready` for what that does and does
+        not guarantee).  FIFO: a ready fetch behind a still-flying one
+        stays queued — order is part of the contract."""
+        done: List[Any] = []
+        while self._q and self._q[0].ready():
+            done.append(self._q.popleft().get())
+        return done
+
+    def drain(self) -> Iterator[Any]:
+        """Complete every remaining fetch, oldest first."""
+        while self._q:
+            yield self._q.popleft().get()

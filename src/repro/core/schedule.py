@@ -48,7 +48,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .hostsync import device_get
+from .hostsync import AsyncFetchQueue, device_get
 
 MAX_KEY_BITS = 21  # packed adhesion keys: values must fit in 21 bits
 
@@ -305,6 +305,51 @@ def _store_blocks(slab, E, poff, admit, *, d0: int, d1: int):
     return slab.at[dest].set(jnp.where(ok[:, None], rows, slab[dest]))
 
 
+@jax.jit
+def _merge_compact(A, B):
+    """Append chunk B's valid prefix after chunk A's (both valid-prefix
+    compacted, as every replay/splice output is).  Returns the merged
+    chunk plus the total valid count — the caller flags overflow when it
+    exceeds capacity (static executor: no morsel splitting)."""
+    C = A.valid.shape[0]
+    n1 = jnp.sum(A.valid.astype(jnp.int32))
+    n2 = jnp.sum(B.valid.astype(jnp.int32))
+    slot = jnp.arange(C, dtype=jnp.int32)
+    fromB = slot >= n1
+    bidx = jnp.clip(slot - n1, 0, C - 1)
+
+    def pick(a, b):
+        m = fromB.reshape((C,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, b[bidx], a)
+
+    out = type(A)(*(pick(a, b) for a, b in zip(A, B)))
+    return out._replace(valid=slot < jnp.minimum(n1 + n2, C)), n1 + n2
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _alloc_blocks_static(bump, tplen, lens, cand, *, cap: int):
+    """Functional twin of :meth:`~.cache.DeviceCache.alloc_blocks` for the
+    trace-time executor: bump-allocate one batch of variable-length slab
+    blocks with the arena state (``bump`` pointer, ``tplen`` metadata
+    plane) threaded as traced values.  Same rules as the host allocator —
+    blocks larger than the whole arena are refused outright; if the batch
+    does not fit the remaining arena and the arena is non-empty, every
+    payload is epoch-flushed (``tplen`` reset to -1) before admitting;
+    candidates still beyond capacity are refused prefix-wise.  Returns
+    ``(offsets, admitted, bump', tplen', flushed)``."""
+    lens = jnp.where(cand, lens.astype(jnp.int32), 0)
+    lens = jnp.where(lens <= cap, lens, 0)
+    total = jnp.sum(lens)
+    flushed = (total > cap - bump) & (bump > 0) & (total > 0)
+    bump = jnp.where(flushed, 0, bump)
+    tplen = jnp.where(flushed, jnp.full_like(tplen, -1), tplen)
+    cum = jnp.cumsum(lens)
+    admit = (lens > 0) & (cum <= cap - bump)
+    offs = jnp.where(admit, bump + cum - lens, 0).astype(jnp.int32)
+    bump = bump + jnp.sum(jnp.where(admit, lens, 0))
+    return offs, admit, bump, tplen, flushed
+
+
 @functools.partial(jax.jit, static_argnames=("d0", "d1"))
 def _splice_step(P, mask, poff, plen, slab, *, d0: int, d1: int):
     """:func:`_replay_step` specialized to slab-resident blocks (splice).
@@ -399,7 +444,9 @@ class ScheduleExecutor:
 
     ``mode="count"`` multiplies subtree counts into factors (tier 1 + 2);
     ``mode="evaluate"`` materializes tuples: FOLD replays representative
-    row blocks through ``orig``.  With ``cache_payloads`` on, evaluation
+    row blocks through ``orig`` — drained one-shot by :meth:`evaluate`
+    or streamed by :meth:`evaluate_stream` (blocks leave through a
+    bounded async fetch queue as they are produced; DESIGN.md §2.8).  With ``cache_payloads`` on, evaluation
     also uses tier 2: ENTER probes the payload table, hit rows skip the
     bag entirely, and FOLD splices their cached factorized blocks back
     through the same jitted replay step while storing the miss
@@ -434,15 +481,31 @@ class ScheduleExecutor:
         # per-depth; see kernels/registry.py and Result.expand_paths)
         self.expand_path_runs = {"pallas": 0, "xla": 0}
         self._emitted: List[Tuple[Any, Any]] = []  # (assign, valid) only
+        # streaming emit (DESIGN.md §2.8): bound on in-flight device→host
+        # block copies, and the fold pc whose continuations can stream
+        # straight out (every op after it is EMIT — the common case of a
+        # TD whose last schedule op before EMIT closes the top-level span)
+        self.emit_in_flight = int(getattr(engine, "emit_in_flight", 8))
+        ops = self.schedule.ops
+        self._tail_fold_pc = (len(ops) - 2 if len(ops) >= 2
+                              and ops[-2].kind == FOLD_CHILD else -1)
+        self.emitted_blocks = 0
+        self.emit_queue: Optional[AsyncFetchQueue] = None  # set by stream
 
     # -- public entry points -------------------------------------------
     def count(self) -> int:
-        self._run()
+        for _ in self._iter_emitted():
+            pass
         return int(device_get(self._total, "emit-total"))
 
     def evaluate(self) -> Iterator[np.ndarray]:
-        """Yields (k, n) int32 blocks of result assignments (order cols)."""
-        self._run()
+        """Yields (k, n) int32 blocks of result assignments (order cols).
+
+        One-shot drain: blocks are buffered on device until the pass
+        completes, then fetched with a single batched sync (``emit-rows``).
+        :meth:`evaluate_stream` is the overlapped alternative."""
+        for pairs in self._iter_emitted():
+            self._emitted.extend(pairs)
         if not self._emitted:
             return
         blocks = device_get(self._emitted, "emit-rows")
@@ -451,20 +514,74 @@ class ScheduleExecutor:
             if mask.any():
                 yield np.asarray(assign)[mask]
 
+    def evaluate_stream(self) -> Iterator[np.ndarray]:
+        """Streaming evaluation (DESIGN.md §2.8): yields the same (k, n)
+        int32 blocks as :meth:`evaluate`, in the same (production) order,
+        but each block's device→host copy is *issued asynchronously the
+        moment the block is produced* — tail-span fold continuations and
+        EMIT chunks enter a bounded :class:`~.hostsync.AsyncFetchQueue`
+        whose copies overlap the next morsel's EXPAND work instead of
+        draining in one blocking fetch at pass end.  Async issues ride
+        ``SyncCounter.async_count``/``label_counts["emit-stream"]``; the
+        blocking-sync budget stays O(ops)."""
+        # kept on self so tests/benchmarks can audit the in-flight bound
+        # (high_water/issued) after the stream is drained
+        queue = self.emit_queue = AsyncFetchQueue(self.emit_in_flight)
+        for pairs in self._iter_emitted(stream=True):
+            for pair in pairs:
+                for done in queue.put(pair, "emit-stream"):
+                    row = self._materialize(done)
+                    if row is not None:
+                        yield row
+            for done in queue.poll():
+                row = self._materialize(done)
+                if row is not None:
+                    yield row
+        for done in queue.drain():
+            row = self._materialize(done)
+            if row is not None:
+                yield row
+
+    @staticmethod
+    def _materialize(pair: Tuple[Any, Any]) -> Optional[np.ndarray]:
+        assign, valid = pair
+        mask = np.asarray(valid)
+        if not mask.any():
+            return None
+        return np.asarray(assign)[mask]
+
     def t1_rows_collapsed(self) -> int:
         return int(device_get(self._t1_collapsed, "stats-t1"))
 
     # -- the interpreter -----------------------------------------------
-    def _run(self) -> None:
+    def _iter_emitted(self, stream: bool = False
+                      ) -> Iterator[List[Tuple[Any, Any]]]:
+        """Run the schedule; yields lists of emitted ``(assign, valid)``
+        device pairs (evaluate mode only — count mode yields nothing).
+
+        With ``stream=True``, a top-level span whose FOLD is the last op
+        before EMIT emits each parent morsel's fold continuations
+        *immediately* (they are final result blocks — nothing downstream
+        can change them), instead of accumulating them for the pass-end
+        EMIT.  That is what lets :meth:`evaluate_stream` overlap their
+        device→host copies with the next parent morsel's expansion."""
         ops = self.schedule.ops
         stack: List[_Span] = []
         chunks: List[Any] = [self.engine.initial_frontier()]
         pc = 0
+        stream_tail = (stream and self.mode == "evaluate"
+                       and self._tail_fold_pc >= 0)
         while pc < len(ops):
             if stack and pc == stack[-1].fold_pc:
                 span = stack[-1]
-                span.conts.extend(
-                    self._fold_one(span.frame, chunks, ops[pc]))
+                conts = self._fold_one(span.frame, chunks, ops[pc])
+                if stream_tail and pc == self._tail_fold_pc and \
+                        len(stack) == 1:
+                    # final blocks: stream now, skip the pass-end EMIT
+                    self.emitted_blocks += len(conts)
+                    yield [(F.assign, F.valid) for F in conts]
+                else:
+                    span.conts.extend(conts)
                 if span.next_i < len(span.parents):
                     F = span.parents[span.next_i]
                     span.next_i += 1
@@ -493,7 +610,17 @@ class ScheduleExecutor:
                 chunks = self._op_expand(chunks, op)
                 pc += 1
             else:  # EMIT
-                self._op_emit(chunks)
+                self.op_runs["emit"] += 1
+                if self.mode == "count":
+                    for F in chunks:
+                        self._total = self._total + jnp.sum(
+                            jnp.where(F.valid, F.factor, 0))
+                elif chunks:
+                    # retain only what emission needs — holding whole
+                    # Frontiers until the fetch would keep factor/orig/
+                    # lo/hi alive for every result chunk of the query
+                    self.emitted_blocks += len(chunks)
+                    yield [(F.assign, F.valid) for F in chunks]
                 pc += 1
         assert not stack, "unbalanced schedule"
 
@@ -754,19 +881,6 @@ class ScheduleExecutor:
                        plen=lens.astype(jnp.int32))
         tbl.payload_skips += int((eligible & ~stored).sum())
 
-    # -- EMIT ----------------------------------------------------------
-    def _op_emit(self, chunks) -> None:
-        self.op_runs["emit"] += 1
-        if self.mode == "count":
-            for F in chunks:
-                self._total = self._total + jnp.sum(
-                    jnp.where(F.valid, F.factor, 0))
-        else:
-            # retain only what emission needs — holding whole Frontiers
-            # until the final fetch would keep factor/orig/lo/hi alive for
-            # every result chunk of the query
-            self._emitted.extend((F.assign, F.valid) for F in chunks)
-
     # -- shared --------------------------------------------------------
     def _admit(self, out, label: str):
         """Drop empty chunks with ONE batched host sync for the whole op."""
@@ -802,24 +916,44 @@ def _pack_parent_morsels(pcnt: np.ndarray, cap: int) -> List[np.ndarray]:
 
 
 def execute_static(schedule: Schedule, engine, F0, tables: Dict[int, tuple],
-                   cfg) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[int, tuple]]:
+                   cfg, mode: str = "count"):
     """Trace-time interpreter of ``schedule``: one pure computation.
 
     Fixed chunk capacity (overflow is flagged, not split), tier-2 tables
-    threaded functionally (``tables[c]`` is the (keys, vals, used, stamp,
-    cost) tuple of ``core/cache.py``), LRU tick statically unrolled.
-    Returns ``(count, overflow, tables)`` — ``shard_map``-able as-is.
-    EXPAND ops route through the same registry-dispatched kernels as the
-    host executor (``engine._expand_fn`` resolves the ``expand_kernel``
-    knob at build time, so the choice is baked in before tracing).
+    threaded functionally, LRU tick statically unrolled.  ``tables[c]`` is
+    either the count-only ``(keys, vals, used, stamp, cost)`` tuple of
+    ``core/cache.py`` or — payload-capable evaluation (DESIGN.md §2.8) —
+    the 9-tuple extending it with ``(pay_off, pay_len, slab, bump)``: the
+    §2.6 row-block region with the arena bump pointer as a traced scalar,
+    so slab allocation/epoch-flush happen inside the pure computation
+    (:func:`_alloc_blocks_static`).
+
+    ``mode="count"`` returns ``(count, overflow, tables)`` —
+    ``shard_map``-able as-is.  ``mode="evaluate"`` materializes: FOLD
+    replays miss representatives through ``orig`` (:func:`_replay_step`),
+    splices payload hits from the slab (:func:`_splice_step` — hit rows
+    never descend into the bag), merges both continuations into the one
+    fixed-capacity chunk (:func:`_merge_compact`; overflow flagged), and
+    stores the fresh blocks; returns ``(assign, valid, count, overflow,
+    replay_hits, tables)`` where ``(assign, valid)`` is the result chunk.
+    Count-only tables are bypassed in evaluation mode (optionality), as in
+    the host executor.  EXPAND ops route through the same
+    registry-dispatched kernels as the host executor (``engine._expand_fn``
+    resolves the ``expand_kernel`` knob at build time, so the choice is
+    baked in before tracing).
     """
-    from .cache import _insert as cache_insert, _probe as cache_probe
+    from .cache import (_insert as cache_insert, _probe as cache_probe,
+                        _probe_payload as cache_probe_payload)
+    if mode not in ("count", "evaluate"):
+        raise ValueError(mode)
     C = engine.capacity
     F = F0
     ov = jnp.zeros((), bool)
     stack: List[tuple] = []
     tick = 0
     total = jnp.zeros((), jnp.int64)
+    n_replay = jnp.zeros((), jnp.int64)
+    rows = rvalid = None
     for op in schedule.ops:
         if op.kind == EXPAND:
             F, needed = engine._expand_fn(op.d)(F)
@@ -827,14 +961,31 @@ def execute_static(schedule: Schedule, engine, F0, tables: Dict[int, tuple],
         elif op.kind == ENTER_CHILD:
             keys = (_pack_keys(F.assign, op.adhesion, op.node)
                     if (op.probe or op.dedup) else None)
-            use_t2 = op.probe and op.node in tables
-            if use_t2:
-                tk, tv, tu, ts, tc = tables[op.node]
+            tbl = tables.get(op.node)
+            has_pay = tbl is not None and len(tbl) > 5
+            # evaluation probes tier 2 only on payload-capable tables:
+            # count-only entries cannot replay tuples (optionality)
+            use_t2 = op.probe and tbl is not None and (
+                mode == "count" or has_pay)
+            poff = plen = None
+            if use_t2 and mode == "evaluate":
+                tk, tv, tu, ts, tc, tpoff, tplen, slab, bump = tbl
+                tick += 1
+                hit, poff, plen, ts = cache_probe_payload(
+                    tk, tu, ts, tpoff, tplen, keys, F.valid,
+                    jnp.int32(tick))
+                hvals = jnp.zeros((C,), jnp.int64)
+                n_replay = n_replay + jnp.sum(hit.astype(jnp.int64))
+                tables = dict(tables)
+                tables[op.node] = (tk, tv, tu, ts, tc, tpoff, tplen,
+                                   slab, bump)
+            elif use_t2:
+                tk, tv, tu, ts, tc = tbl[:5]
                 tick += 1
                 hit, hvals, ts = cache_probe(tk, tv, tu, ts, keys, F.valid,
                                              jnp.int32(tick))
                 tables = dict(tables)
-                tables[op.node] = (tk, tv, tu, ts, tc)
+                tables[op.node] = (tk, tv, tu, ts, tc) + tuple(tbl[5:])
             else:
                 hit = jnp.zeros((C,), bool)
                 hvals = jnp.zeros((C,), jnp.int64)
@@ -847,26 +998,111 @@ def execute_static(schedule: Schedule, engine, F0, tables: Dict[int, tuple],
                 rep_of_row = jnp.arange(C, dtype=jnp.int32)
                 R = _identity_reps(F, active)
             stack.append((F, keys, hit, hvals, rep_of_row, first_idx,
-                          n_reps, active, use_t2))
+                          n_reps, active, use_t2, poff, plen))
             F = R
         elif op.kind == FOLD_CHILD:
-            cnt = _segment_counts(F, C)
             (P, keys, hit, hvals, rep_of_row, first_idx, n_reps, active,
-             use_t2) = stack.pop()
-            if use_t2:
-                if op.dedup:
-                    rep_keys = keys[jnp.clip(first_idx, 0, C - 1)]
-                    rep_active = jnp.arange(C) < n_reps
+             use_t2, poff, plen) = stack.pop()
+            if mode == "evaluate":
+                E = F
+                d0, d1 = op.sub_first, op.sub_last
+                # replay the miss representatives' exits through orig
+                cont, needed = _replay_step(P, active, rep_of_row, E,
+                                            d0=d0, d1=d1)
+                ov = ov | (needed > C)
+                if use_t2:
+                    (tk, tv, tu, ts, tc, tpoff, tplen, slab,
+                     bump) = tables[op.node]
+                    # splice payload hits BEFORE this table's insert (an
+                    # epoch flush below may reuse the probed arena rows)
+                    spl = _splice_step(P, hit, poff, plen, slab,
+                                       d0=d0, d1=d1)
+                    # the host executor pre-packs hit morsels to fit; the
+                    # static path splices all hits at once, so the pair
+                    # total must be overflow-checked explicitly (the
+                    # splice itself clamps silently)
+                    n_spl = jnp.sum(jnp.where(hit, plen, 0)
+                                    .astype(jnp.int64))
+                    ov = ov | (n_spl > C)
+                    merged, n_tot = _merge_compact(cont, spl)
+                    ov = ov | (n_tot > C)
+                    F = merged
+                    # store the miss reps' blocks: single exit chunk, so
+                    # every rep's block is complete by construction
+                    ecnt = jnp.zeros((C,), jnp.int32).at[
+                        jnp.clip(E.orig, 0, C - 1)].add(
+                        E.valid.astype(jnp.int32))
+                    if op.dedup:
+                        rep_keys = keys[jnp.clip(first_idx, 0, C - 1)]
+                        eligible = (ecnt > 0) & (jnp.arange(C) < n_reps)
+                    else:
+                        rep_keys = keys
+                        eligible = (ecnt > 0) & active
+                        # duplicate adhesion keys: only the first
+                        # occurrence may store (or the rest leak arena
+                        # rows), mirroring the host executor's host-side
+                        # collapse
+                        fi, _, nr = _dedup(keys, eligible)
+                        isrep = jnp.zeros((C,), jnp.int32).at[
+                            jnp.clip(fi, 0, C - 1)].max(
+                            (jnp.arange(C) < nr).astype(jnp.int32))
+                        eligible = eligible & (isrep > 0)
+                    offs, admit, bump, tplen, _fl = _alloc_blocks_static(
+                        bump, tplen, ecnt, eligible,
+                        cap=int(cfg.payload_rows))
+                    slab = _store_blocks(slab, E, offs, admit,
+                                         d0=d0, d1=d1)
+                    tick += 1
+                    lens = ecnt.astype(jnp.int64)
+                    out = cache_insert(
+                        tk, tv, tu, ts, tc, rep_keys, lens,
+                        jnp.maximum(lens, 1), admit, jnp.int32(tick),
+                        policy=cfg.policy, rounds=min(cfg.ways, 8),
+                        pay=(tpoff, tplen, offs, ecnt))
+                    tables = dict(tables)
+                    tables[op.node] = out[:7] + (slab, bump)
                 else:
-                    rep_keys, rep_active = keys, active
-                tick += 1
-                out = cache_insert(*tables[op.node], rep_keys, cnt,
-                                   jnp.maximum(cnt, 1), rep_active,
-                                   jnp.int32(tick), policy=cfg.policy,
-                                   rounds=min(cfg.ways, 8))
-                tables = dict(tables)
-                tables[op.node] = out[:5]
-            F = _apply_counts(P, hit, hvals, rep_of_row, cnt)
+                    F = cont
+            else:
+                cnt = _segment_counts(F, C)
+                if use_t2:
+                    if op.dedup:
+                        rep_keys = keys[jnp.clip(first_idx, 0, C - 1)]
+                        rep_active = jnp.arange(C) < n_reps
+                    else:
+                        rep_keys, rep_active = keys, active
+                    tbl = tables[op.node]
+                    tick += 1
+                    if len(tbl) > 5:
+                        # payload table in count mode: carry the metadata
+                        # planes with the -1 sentinel, so an evicting
+                        # count insert never leaves a stale block
+                        # reachable (the §2.6 eviction-coupling rule)
+                        tpoff, tplen, slab, bump = tbl[5:]
+                        sent_off = jnp.zeros((C,), jnp.int32)
+                        sent_len = jnp.full((C,), -1, jnp.int32)
+                        out = cache_insert(
+                            *tbl[:5], rep_keys, cnt, jnp.maximum(cnt, 1),
+                            rep_active, jnp.int32(tick), policy=cfg.policy,
+                            rounds=min(cfg.ways, 8),
+                            pay=(tpoff, tplen, sent_off, sent_len))
+                        new_tbl = out[:7] + (slab, bump)
+                    else:
+                        out = cache_insert(*tbl, rep_keys, cnt,
+                                           jnp.maximum(cnt, 1), rep_active,
+                                           jnp.int32(tick),
+                                           policy=cfg.policy,
+                                           rounds=min(cfg.ways, 8))
+                        new_tbl = out[:5]
+                    tables = dict(tables)
+                    tables[op.node] = new_tbl
+                F = _apply_counts(P, hit, hvals, rep_of_row, cnt)
         else:  # EMIT
-            total = jnp.sum(jnp.where(F.valid, F.factor, 0))
-    return total, ov, tables
+            if mode == "count":
+                total = jnp.sum(jnp.where(F.valid, F.factor, 0))
+            else:
+                rows, rvalid = F.assign, F.valid
+                total = jnp.sum(F.valid.astype(jnp.int64))
+    if mode == "count":
+        return total, ov, tables
+    return rows, rvalid, total, ov, n_replay, tables

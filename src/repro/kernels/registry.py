@@ -31,8 +31,11 @@ measurement anywhere).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import json
 import math
+import os
 import time
 import warnings
 from dataclasses import dataclass
@@ -47,7 +50,9 @@ from .leapfrog import leapfrog, ref as leapfrog_ref
 
 __all__ = ["ExpandSpec", "lower_bound", "upper_bound", "expand_fn",
            "select_expand", "autotune_cache", "failures",
-           "clear_autotune_cache", "device_op_count"]
+           "clear_autotune_cache", "device_op_count",
+           "save_autotune_cache", "load_autotune_cache",
+           "AUTOTUNE_CACHE_ENV"]
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +131,19 @@ class ExpandSpec:
 _AUTOTUNE: Dict[Tuple[ExpandSpec, str], str] = {}
 _FAILURES: Dict[Tuple[ExpandSpec, str], str] = {}
 
+# measured-autotune persistence (ROADMAP follow-on from the kernel PR):
+# autotuning costs one compile+timing of BOTH paths per (spec, platform);
+# the sidecar makes that a once-per-machine cost instead of once-per-
+# process.  Set REPRO_AUTOTUNE_CACHE to a JSON path to auto-load it before
+# the first "auto" resolution and write through after every measurement.
+# Only MEASURED decisions persist (``_MEASURED`` tracks them): the
+# platform-heuristic defaults are free to recompute and persisting them
+# would pre-empt a later ``measure=True`` run with a never-measured guess.
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_SIDECAR_VERSION = 1
+_sidecar_loaded = False
+_MEASURED: set = set()  # keys whose _AUTOTUNE entry came from a timing run
+
 
 def autotune_cache() -> Dict[Tuple[ExpandSpec, str], str]:
     return dict(_AUTOTUNE)
@@ -136,8 +154,105 @@ def failures() -> Dict[Tuple[ExpandSpec, str], str]:
 
 
 def clear_autotune_cache() -> None:
+    global _sidecar_loaded
     _AUTOTUNE.clear()
     _FAILURES.clear()
+    _MEASURED.clear()
+    _sidecar_loaded = False
+
+
+def save_autotune_cache(path: Optional[str] = None) -> Optional[str]:
+    """Persist the measured autotune decisions as a JSON sidecar.
+
+    Entries are keyed by ``(spec, platform)``: each record carries the
+    :class:`ExpandSpec` fields verbatim, so a process with a different
+    capacity/arity mix shares only the entries that actually match.
+    Heuristic (unmeasured) entries are not written — see the module
+    comment.  On-disk entries are merged in first (in-memory wins), so
+    sequential writers preserve each other's measurements; simultaneous
+    writers are best-effort (no file lock — a lost entry just costs one
+    re-measurement).  ``path`` defaults to ``$REPRO_AUTOTUNE_CACHE``;
+    returns the path written, or ``None`` when there is neither a path
+    nor anything to write (an empty save never clobbers an existing
+    sidecar)."""
+    path = path or os.environ.get(AUTOTUNE_CACHE_ENV)
+    if not path:
+        return None
+    # merge the on-disk entries first (in-memory wins) so a write-through
+    # doesn't simply replace what other processes measured.  Best-effort
+    # only: the read-merge-replace is not atomic, so two processes
+    # writing in the same instant can still lose one entry (it is a
+    # cache — the loser re-measures once); no locking for that corner.
+    if os.path.exists(path):
+        load_autotune_cache(path)
+    entries = [{"spec": dataclasses.asdict(spec), "platform": platform,
+                "choice": choice}
+               for (spec, platform), choice in _AUTOTUNE.items()
+               if (spec, platform) in _MEASURED]
+    if not entries:
+        return None
+    payload = {"version": _SIDECAR_VERSION, "entries": entries}
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)  # atomic: a concurrent reader never sees a torn file
+    return path
+
+
+def load_autotune_cache(path: Optional[str] = None) -> int:
+    """Merge a JSON sidecar into the in-memory autotune cache.
+
+    Returns the number of entries merged.  In-memory decisions win over
+    the sidecar's (this process may have re-measured).  A missing,
+    corrupt, or wrong-schema file is a *fallback to measuring*, never an
+    error — exactly like a cold cache; malformed entries are skipped
+    individually so one bad record cannot poison the rest."""
+    path = path or os.environ.get(AUTOTUNE_CACHE_ENV)
+    if not path:
+        return 0
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("version") != _SIDECAR_VERSION:
+            raise ValueError(
+                f"sidecar version {payload.get('version')!r} != "
+                f"{_SIDECAR_VERSION} (entry semantics may differ)")
+        entries = payload["entries"]
+        if not isinstance(entries, list):
+            raise TypeError("entries must be a list")
+    except (OSError, ValueError, KeyError, TypeError, AttributeError) as e:
+        if os.path.exists(path):
+            warnings.warn(f"ignoring unreadable autotune sidecar {path}: {e}")
+        return 0
+    fields = {f.name for f in dataclasses.fields(ExpandSpec)}
+    n = 0
+    for ent in entries:
+        try:
+            spec_d = dict(ent["spec"])
+            if set(spec_d) != fields:
+                continue  # written by a different ExpandSpec revision
+            key = (ExpandSpec(**spec_d), str(ent["platform"]))
+            choice = str(ent["choice"])
+            if choice not in ("pallas", "xla"):
+                continue
+        except (KeyError, TypeError, ValueError):
+            continue
+        if key not in _AUTOTUNE:
+            _AUTOTUNE[key] = choice
+            _MEASURED.add(key)  # sidecar entries originate from timing runs
+            n += 1
+    return n
+
+
+def _autoload_sidecar() -> None:
+    """Load ``$REPRO_AUTOTUNE_CACHE`` once, lazily, before the first
+    dispatch decision (import time would race with env setup in tests)."""
+    global _sidecar_loaded
+    if _sidecar_loaded:
+        return
+    _sidecar_loaded = True
+    if os.environ.get(AUTOTUNE_CACHE_ENV):
+        load_autotune_cache()
 
 
 class _BenchChunk(NamedTuple):
@@ -195,6 +310,7 @@ def select_expand(spec: ExpandSpec, mode: str = "auto",
     platform = platform or jax.default_backend()
     if mode != "auto":
         return mode
+    _autoload_sidecar()  # a persisted measurement beats re-measuring
     key = (spec, platform)
     if key in _AUTOTUNE:
         return _AUTOTUNE[key]
@@ -202,6 +318,8 @@ def select_expand(spec: ExpandSpec, mode: str = "auto",
     if not do_measure or builders is None:
         # CPU default: the XLA chain; interpret-mode Pallas is a
         # conformance vehicle, not a perf path
+        # heuristic, not measured: cached in-process only (persisting it
+        # would pre-empt a future measure=True run with a guess)
         choice = "pallas" if platform in ("tpu", "gpu") else "xla"
         _AUTOTUNE[key] = choice
         return choice
@@ -215,7 +333,19 @@ def select_expand(spec: ExpandSpec, mode: str = "auto",
             _FAILURES[key] = f"{name}: {e}"
     choice = min(timings, key=timings.get) if timings else "xla"
     _AUTOTUNE[key] = choice
+    _MEASURED.add(key)
+    _maybe_writethrough()
     return choice
+
+
+def _maybe_writethrough() -> None:
+    """Persist after every new *measured* decision when the sidecar env
+    var is set — the whole point is surviving the process."""
+    if os.environ.get(AUTOTUNE_CACHE_ENV):
+        try:
+            save_autotune_cache()
+        except OSError as e:  # pragma: no cover - fs-specific
+            warnings.warn(f"could not persist autotune cache: {e}")
 
 
 def expand_fn(spec: ExpandSpec, *, mode: str = "auto", impl: str = "bsearch",

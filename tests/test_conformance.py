@@ -302,6 +302,34 @@ def test_zoo_expand_kernel_forced_each_way(zoo_dbs, ek):
 
 
 @pytest.mark.tier1
+@pytest.mark.parametrize("cname,cfg", [ZOO_CACHES[0], ZOO_CACHES[2],
+                                       ZOO_CACHES[5]],
+                         ids=["off", "assoc4-pay", "tiny-slab"])
+def test_zoo_evaluate_stream_reassembles_to_one_shot(zoo_dbs, cname, cfg):
+    """The zoo through streaming evaluation, double-pass per engine so
+    splice-on-hit streams too: the reassembled ``evaluate_stream`` blocks
+    must be *bit-identical, in block order,* to a one-shot ``evaluate``
+    of a twin engine (streaming moves the output data plane only — same
+    rows, same arrival order, payloads on or off, flush-heavy slab
+    included)."""
+    db = zoo_dbs[0]
+    for qname, q in ZOO:
+        td, order = choose_plan(q, db.stats())
+        eng_one = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 8,
+                                    cache=cfg)
+        eng_st = JaxCachedTrieJoin(q, td, order, db, capacity=1 << 8,
+                                   cache=cfg)
+        for run in (1, 2):
+            one = list(eng_one.evaluate())
+            st = list(eng_st.evaluate_stream())
+            a = (np.concatenate(one, axis=0) if one
+                 else np.zeros((0, len(order)), np.int32))
+            b = (np.concatenate(st, axis=0) if st
+                 else np.zeros((0, len(order)), np.int32))
+            assert np.array_equal(a, b), f"{qname}/{cname} run {run}"
+
+
+@pytest.mark.tier1
 def test_zoo_replay_hits_on_recurring_bags(zoo_dbs):
     """On a recurring-bag query over a skewed DB, the second evaluation
     pass of a shared engine must actually serve tier-2 replay hits (the

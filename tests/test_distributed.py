@@ -42,6 +42,48 @@ print(int(total), int(ov), lftj_count(q, order, db))
     assert total == want and ov == 0
 
 
+def test_distributed_evaluate_payload_parity_and_warm_replay():
+    """Payload-capable distributed evaluation (DESIGN.md §2.8): per-shard
+    slab arenas, shard-local splice, host-side merge.  The merged tuple
+    set must equal the host oracle's on both passes, and the second pass
+    (tables round-tripped) must serve tier-2 replay hits — the
+    acceptance-criterion recurring-bag query."""
+    out = _run("""
+import numpy as np, jax
+from repro.core import CacheConfig, bowtie_query, choose_plan, clftj_evaluate
+from repro.core.distributed import make_distributed_evaluate
+from repro.core.db import graph_db
+from repro.data.graphs import zipf_graph
+db = graph_db(zipf_graph(14, 80, 1.1, seed=7))
+q = bowtie_query()
+td, order = choose_plan(q, db.stats())
+want = {tuple(map(int, t)) for t in
+        np.asarray(clftj_evaluate(q, td, order, db),
+                   np.int64).reshape(-1, len(order))}
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = CacheConfig(policy="setassoc", slots=256, assoc=4,
+                  cache_payloads=True, payload_rows=1 << 12)
+fn0, eng0 = make_distributed_evaluate(q, td, order, db, mesh,
+                                      capacity=1 << 12)
+assert eng0.cache_config.cache_payloads, "default must be replay-capable"
+fn, eng = make_distributed_evaluate(q, td, order, db, mesh,
+                                    capacity=1 << 12,
+                                    axes=("data", "model"), cache=cfg)
+rows1, s1, tables = fn()
+rows2, s2, _ = fn(tables)
+got1 = {tuple(map(int, r)) for r in rows1.tolist()}
+got2 = {tuple(map(int, r)) for r in rows2.tolist()}
+print(int(got1 == want and rows1.shape[0] == len(got1)),
+      int(got2 == want and rows2.shape[0] == len(got2)),
+      s1["overflow"] + s2["overflow"],
+      s1["tier2_replay_hits"], s2["tier2_replay_hits"],
+      int(s1["count"] == s2["count"] == len(want)))
+""")
+    ok1, ok2, ov, hits1, hits2, counts_ok = map(int, out.split())
+    assert ok1 and ok2 and counts_ok and ov == 0
+    assert hits1 == 0 and hits2 > 0, (hits1, hits2)
+
+
 def test_sharded_train_step_runs_on_mesh():
     out = _run("""
 import jax, jax.numpy as jnp, numpy as np

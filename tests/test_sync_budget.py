@@ -109,6 +109,35 @@ def test_evaluate_payload_sync_budget(db):
     assert sc.label_counts["replay-plan"] <= r["fold"], sc.label_counts
 
 
+@pytest.mark.tier1
+def test_evaluate_stream_sync_budget(db):
+    """Streaming emission must keep BLOCKING host syncs O(ops): result
+    blocks leave as async fetches (``emit-stream`` issues, counted in
+    ``async_count`` and labeled separately in ``label_counts``) — never
+    as the one-shot ``emit-rows`` drain, and never as per-block blocking
+    syncs.  Totals must still match the one-shot path exactly."""
+    q = path_query(4)
+    td, order = choose_plan(q, db.stats())
+    eng = JaxCachedTrieJoin(
+        q, td, order, db, capacity=1 << 9,
+        cache=CacheConfig(policy="setassoc", slots=256, assoc=4,
+                          cache_payloads=True, payload_rows=1 << 14))
+    n1 = sum(b.shape[0] for b in eng.evaluate())  # warm: fills the slab
+    with SyncCounter() as sc:
+        n2 = sum(b.shape[0] for b in eng.evaluate_stream())
+    assert n1 == n2 == lftj_count(q, order, db)
+    assert eng.stats["tier2_replay_hits"] > 0, "payload path not exercised"
+    r = eng.last_executor.op_runs
+    # blocking budget unchanged — streaming adds no blocking syncs at all
+    assert sc.count <= _budget(eng), sc.events
+    assert sc.label_counts["emit-rows"] == 0, "one-shot drain in stream mode"
+    # every emitted block left through the async queue, labeled as such
+    assert sc.label_counts["emit-stream"] == sc.async_count > 0
+    assert sc.async_count == eng.last_executor.emitted_blocks
+    # payload fetches still batch per fold op, never per hit
+    assert sc.label_counts["replay-plan"] <= r["fold"], sc.label_counts
+
+
 def test_vanilla_lftj_sync_budget(db):
     q = path_query(3)
     order = sorted(q.variables)
