@@ -1,0 +1,136 @@
+"""Query-serving latency under a Zipf-mixed workload (DESIGN.md §2.9).
+
+Three regimes over the SAME workload — a stream of isomorphic variants of
+a few recurring query shapes, shape frequency Zipf-distributed the way a
+production query log is:
+
+* ``serve/cold``            — ``max_plans=0``: every query pays planning +
+  engine construction + jit compile (the one-shot facade's regime).
+* ``serve/plan-warm``       — the plan cache resident after one warm-up
+  pass: isomorphic queries share compiled engines, tier-2 tables
+  compound across queries.
+* ``serve/persistent-warm`` — a FRESH server whose state was loaded from
+  a snapshot written by the plan-warm server: its very first queries hit
+  both the plan cache and the persisted payload slabs
+  (``tier2_replay_hits > 0`` with zero process-local warm-up).
+
+Each regime's record carries p50/p99 latency and throughput; the derived
+column pins the headline claim — plan-cache-warm p50 beats cold p50 —
+plus the persistent regime's replay-hit count (must be nonzero: warm
+state genuinely crossed the process/snapshot boundary).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.configs.paper_clftj import TPU_SERVE
+from repro.core import cycle_query, path_query
+from repro.core.cq import CQ
+from repro.core.db import graph_db
+from repro.serve import JoinServer
+
+from .common import emit
+
+import dataclasses
+
+CFG = dataclasses.replace(TPU_SERVE, cache_slots=1 << 10, cache_assoc=4,
+                          payload_rows=1 << 14, frontier_capacity=1 << 14)
+SHAPES = [path_query(3), cycle_query(3), path_query(4)]
+N_QUERIES = 16
+N_COLD = 6           # cold pays a full compile per query — keep it short
+
+
+def _db():
+    from repro.data.graphs import zipf_graph
+    return graph_db(zipf_graph(24, 360, 1.1, seed=11))
+
+
+def _scramble(q: CQ, seed: int) -> CQ:
+    from repro.serve.canonical import rename_query
+    rng = np.random.default_rng(seed)
+    variables = list(q.variables)
+    names = [f"s{i}" for i in rng.permutation(len(variables))]
+    atoms = list(rename_query(q, dict(zip(variables, names))).atoms)
+    rng.shuffle(atoms)
+    return CQ(tuple(atoms))
+
+
+def _workload(n: int, seed: int):
+    """Zipf-mixed shape choice, every instance an isomorphic variant."""
+    rng = np.random.default_rng(seed)
+    return [_scramble(SHAPES[min(int(rng.zipf(1.6)) - 1, len(SHAPES) - 1)],
+                      seed * 977 + i)
+            for i in range(n)]
+
+
+def _measure(srv: JoinServer, work):
+    lat, replay, hits = [], 0, 0
+    t_all = time.perf_counter()
+    for q in work:
+        t0 = time.perf_counter()
+        r = srv.evaluate(q)
+        lat.append(time.perf_counter() - t0)
+        replay += r.tier2_replay_hits
+        hits += int(r.plan_cache_hit)
+    span = time.perf_counter() - t_all
+    lat_ms = np.array(lat) * 1e3
+    return {"p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "mean_ms": float(lat_ms.mean()),
+            "qps": len(work) / span,
+            "queries": len(work),
+            "plan_hits": hits,
+            "replay_hits": replay}
+
+
+def main() -> None:
+    db = _db()
+    work = _workload(N_QUERIES, seed=5)
+
+    with JoinServer(db, CFG, max_plans=0) as srv:      # always-cold regime
+        cold = _measure(srv, work[:N_COLD])
+    emit("serve/cold", cold["p50_ms"] * 1e3,
+         f"p50_ms={cold['p50_ms']:.1f};p99_ms={cold['p99_ms']:.1f};"
+         f"qps={cold['qps']:.2f}",
+         record={"kind": "serve", "regime": "cold", **cold})
+
+    with JoinServer(db, CFG, max_plans=16) as srv:
+        _measure(srv, work)                            # warm-up pass
+        warm = _measure(srv, work)
+        snap = os.path.join(tempfile.mkdtemp(prefix="bench_serve_"),
+                            "snap.npz")
+        t0 = time.perf_counter()
+        srv.save_snapshot(snap)
+        save_s = time.perf_counter() - t0
+    speedup = cold["p50_ms"] / max(warm["p50_ms"], 1e-9)
+    emit("serve/plan-warm", warm["p50_ms"] * 1e3,
+         f"p50_ms={warm['p50_ms']:.1f};p99_ms={warm['p99_ms']:.1f};"
+         f"qps={warm['qps']:.2f};p50_speedup_vs_cold={speedup:.1f}x;"
+         f"p50_improves={warm['p50_ms'] < cold['p50_ms']}",
+         record={"kind": "serve", "regime": "plan-warm",
+                 "p50_speedup_vs_cold": speedup,
+                 "p50_improves_over_cold":
+                     bool(warm["p50_ms"] < cold["p50_ms"]), **warm})
+
+    with JoinServer(db, CFG, max_plans=16) as srv:     # fresh "process"
+        t0 = time.perf_counter()
+        summary = srv.load_snapshot(snap)
+        load_s = time.perf_counter() - t0
+        pers = _measure(srv, work)                     # FIRST pass, no warm-up
+    os.remove(snap)
+    emit("serve/persistent-warm", pers["p50_ms"] * 1e3,
+         f"p50_ms={pers['p50_ms']:.1f};p99_ms={pers['p99_ms']:.1f};"
+         f"qps={pers['qps']:.2f};replay_hits={pers['replay_hits']};"
+         f"loaded_plans={summary['plans']};load_s={load_s:.2f}",
+         record={"kind": "serve", "regime": "persistent-warm",
+                 "snapshot_save_s": save_s, "snapshot_load_s": load_s,
+                 "loaded_plans": summary["plans"],
+                 "loaded_tables": summary["tables"], **pers})
+
+
+if __name__ == "__main__":
+    main()

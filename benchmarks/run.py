@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Module map:
   bench_td_skew         — Figs 13/14
   bench_engine_backends — beyond-paper: vectorized engine + tier ablation
   bench_expand_kernel   — fused-EXPAND kernel: device-op counts + e2e deltas
+  bench_serve           — query-serving latency: cold vs plan-cache-warm
+                          vs snapshot-loaded persistent-warm (DESIGN §2.9)
   bench_lm_step         — LM substrate wall-clock micro-bench
 
 ``--json [PATH]`` additionally writes every emitted row as structured
@@ -26,7 +28,7 @@ MODULES = [
     "bench_count_queries", "bench_path_scaling", "bench_cycle_scaling",
     "bench_eval_queries", "bench_cache_size", "bench_cache_structure",
     "bench_td_skew", "bench_engine_backends", "bench_expand_kernel",
-    "bench_stream_emit", "bench_lm_step",
+    "bench_stream_emit", "bench_serve", "bench_lm_step",
 ]
 
 

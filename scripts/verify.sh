@@ -13,12 +13,19 @@
 #                                    # --json and schema-check the emitted
 #                                    # record (scripts/check_bench_json.py)
 #                                    # so BENCH_*.json can't silently rot
+#   scripts/verify.sh --serve        # query-serving tier only: plan cache,
+#                                    # cross-process snapshots, concurrent
+#                                    # sessions (DESIGN.md §2.9)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "${1:-}" = "--pallas" ]; then
     shift
     exec python -m pytest -x -q -m pallas "$@"
+fi
+if [ "${1:-}" = "--serve" ]; then
+    shift
+    exec python -m pytest -x -q -m "serve and not slow" "$@"
 fi
 if [ "${1:-}" = "--bench-smoke" ]; then
     shift

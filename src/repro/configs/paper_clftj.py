@@ -70,3 +70,9 @@ TPU_STREAM_EMIT = JoinEngineConfig(   # §2.8 streaming evaluation: replay-
     # are small relative to device memory)
     cache_policy="setassoc", cache_assoc=8, cache_slots=1 << 14,
     cache_payloads=True, payload_rows=1 << 17, emit_in_flight=16)
+TPU_SERVE = JoinEngineConfig(         # repro/serve default (DESIGN §2.9):
+    # long-lived engines answering many queries — associative tables so
+    # cross-query keys don't conflict-thrash, payload replay on so warm
+    # queries splice instead of recomputing, streaming emit for sessions
+    cache_policy="setassoc", cache_assoc=8, cache_slots=1 << 14,
+    cache_payloads=True, payload_rows=1 << 17, emit_in_flight=8)

@@ -54,6 +54,7 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import enable_x64
 
 from .hostsync import device_get
 
@@ -601,6 +602,115 @@ class DeviceCache:
         out["slab_rows"] = self.slab_bump
         return out
 
+    # -- cross-process state (repro/serve snapshots; DESIGN.md §2.9) ---
+    def export_state(self) -> Dict[str, object]:
+        """Host copy of everything a fresh process needs to serve hits
+        from this table: the key/count planes, the payload metadata +
+        slab arena, and the host-side slab epoch (``slab_bump`` and
+        ``payload_flushes``).  The epoch scalars are the part a naive
+        array-only snapshot loses — without them a loader's allocator
+        restarts at row 0 and overwrites resident blocks whose
+        ``pay_off``/``pay_len`` still claim those rows (stale splices)."""
+        arrays = {"keys": self.keys, "vals": self.vals, "used": self.used,
+                  "stamp": self.stamp, "cost": self.cost}
+        if self.pay_off is not None:
+            arrays["pay_off"] = self.pay_off
+            arrays["pay_len"] = self.pay_len
+            if self.slab is not None:
+                arrays["slab"] = self.slab
+        host = device_get(arrays, "cache-export")
+        state: Dict[str, object] = {k: np.asarray(v)
+                                    for k, v in host.items()}
+        state["slab_bump"] = int(self.slab_bump)
+        state["payload_flushes"] = int(self.payload_flushes)
+        state["tick"] = int(self.tick)
+        return state
+
+    def import_state(self, state: Dict[str, object]) -> str:
+        """Adopt a previously exported table state.  Returns:
+
+        * ``"ok"``      — keys/counts and (if configured) payloads resident;
+        * ``"flushed"`` — keys/counts adopted but the payload region was
+          cold-started because the snapshot's slab epoch is unusable
+          (missing/mis-shaped slab, or a resident block outside
+          ``[0, slab_bump]`` — the stale-splice hazard this method exists
+          to close);
+        * ``"rejected"`` — state malformed for this config; table unchanged.
+
+        The loaded slot count may differ from ``config.slots`` (the writer
+        may have resized); table ops derive their geometry from the array
+        shapes, so the arrays are adopted wholesale."""
+        try:
+            keys = np.asarray(state["keys"], np.int64)
+            vals = np.asarray(state["vals"], np.int64)
+            used = np.asarray(state["used"], bool)
+            stamp = np.asarray(state["stamp"], np.int32)
+            cost = np.asarray(state["cost"], np.int64)
+        except (KeyError, TypeError, ValueError):
+            return "rejected"
+        shape = keys.shape
+        if (keys.ndim != 2 or shape[1] != self.config.ways
+                or any(a.shape != shape
+                       for a in (vals, used, stamp, cost))):
+            return "rejected"
+        # adoption must run under x64 or the int64 key/count planes are
+        # silently truncated to int32 (packed adhesion keys would corrupt)
+        with enable_x64():
+            self.keys = jnp.asarray(keys)
+            self.vals = jnp.asarray(vals)
+            self.used = jnp.asarray(used)
+            self.stamp = jnp.asarray(stamp)
+            self.cost = jnp.asarray(cost)
+        self.tick = max(self.tick, int(state.get("tick", 0)))
+        if not self.config.cache_payloads:
+            return "ok"
+        status = "ok"
+        cap = int(self.config.payload_rows)
+        try:
+            pay_off = np.asarray(state["pay_off"], np.int32)
+            pay_len = np.asarray(state["pay_len"], np.int32)
+            bump = int(state["slab_bump"])
+            if pay_off.shape != shape or pay_len.shape != shape:
+                raise ValueError("payload plane shape mismatch")
+            resident = used & (pay_len >= 0)
+            if not (0 <= bump <= cap):
+                raise ValueError("slab_bump outside the arena")
+            if "slab" in state:
+                slab = np.asarray(state["slab"], np.int32)
+                if slab.ndim != 2 or slab.shape[0] != cap + 1:
+                    raise ValueError("slab arena shape mismatch")
+            else:
+                # writer never materialized an arena — legal only if no
+                # entry claims a block
+                if resident.any() or bump != 0:
+                    raise ValueError("resident blocks but no slab arena")
+                slab = None
+            if resident.any():
+                off = pay_off[resident].astype(np.int64)
+                ln = pay_len[resident].astype(np.int64)
+                # the slab-epoch invariant: every resident block must lie
+                # inside the allocated prefix, else a future alloc would
+                # overwrite rows a key still points at (stale splice)
+                if (off < 0).any() or ((off + ln) > bump).any():
+                    raise ValueError("resident block outside slab epoch")
+            with enable_x64():
+                self.pay_off = jnp.asarray(pay_off)
+                self.pay_len = jnp.asarray(pay_len)
+                self.slab = None if slab is None else jnp.asarray(slab)
+            self.slab_bump = bump
+            self.payload_flushes = int(state.get("payload_flushes", 0))
+        except (KeyError, TypeError, ValueError):
+            # cold-start the payload region only: keys/counts stay warm
+            # (count-mode hits unaffected), blocks re-fill on use
+            s, w = shape
+            self.pay_off = jnp.zeros((s, w), jnp.int32)
+            self.pay_len = jnp.full((s, w), -1, jnp.int32)
+            self.slab = None
+            self.slab_bump = 0
+            self.payload_flushes += 1
+            status = "flushed"
+        return status
+
 
 class CacheManager:
     """Per-TD-node DeviceCaches under one global slot budget."""
@@ -659,3 +769,24 @@ class CacheManager:
             for k, val in t.stats().items():
                 agg[k] = agg.get(k, 0) + val
         return agg
+
+    # -- cross-process state (repro/serve snapshots) -------------------
+    def export_state(self) -> Dict[int, Dict[str, object]]:
+        """Per-node table states (see :meth:`DeviceCache.export_state`)."""
+        return {int(v): t.export_state() for v, t in self.tables.items()}
+
+    def import_state(self, states: Dict[int, Dict[str, object]]
+                     ) -> Dict[int, str]:
+        """Adopt exported per-node states; nodes disabled under this
+        config are skipped.  Returns each node's import status
+        (``"ok"``/``"flushed"``/``"rejected"`` — see
+        :meth:`DeviceCache.import_state`)."""
+        out: Dict[int, str] = {}
+        with enable_x64():  # table creation allocates int64 planes
+            for v, st in states.items():
+                v = int(v)
+                if not self.node_enabled(v):
+                    out[v] = "skipped"
+                    continue
+                out[v] = self.get(v).import_state(st)
+        return out

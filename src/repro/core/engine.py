@@ -65,6 +65,15 @@ class Result:
                 for k, v in self.counters.items()
                 if k.startswith("expand_calls_")}
 
+    @property
+    def plan_cache_hit(self) -> bool:
+        """True when this query was answered by a plan-cached engine (the
+        serving layer's compile-once path, ``repro/serve``): planning, trie
+        construction and jit warm-up were all skipped, and the engine's
+        tier-2 tables were already warm from earlier queries.  Always False
+        for the one-shot ``count``/``evaluate`` facade calls."""
+        return bool(self.counters.get("plan_cache_hit", 0))
+
 
 # -- compile-time accounting (jax.monitoring duration events) --------------
 
@@ -110,6 +119,25 @@ class _CompileClock:
             _compile_accs.remove(self._acc)
         self.total = self._acc[0]
         return False
+
+
+# public name: the serving layer (repro/serve) opens the same clock around
+# each session's execution so per-query compile seconds keep the one-shot
+# facade's accounting discipline
+CompileClock = _CompileClock
+
+
+def serve(db: Database, config=None, **kwargs) -> "object":
+    """Open a long-lived query-serving facade over ``db``: a
+    :class:`repro.serve.JoinServer` with a compile-once plan cache
+    (isomorphic queries share engines), cross-query persistent tier-2
+    tables (snapshot save/load survives the process), and bounded
+    concurrent streaming sessions.  ``config`` is a
+    :class:`repro.configs.paper_clftj.JoinEngineConfig`; remaining keyword
+    arguments are forwarded to :class:`~repro.serve.JoinServer`."""
+    from ..serve import JoinServer  # lazy: serve imports this module
+
+    return JoinServer(db, config=config, **kwargs)
 
 
 def plan_query(q: CQ, db: Optional[Database] = None,

@@ -26,15 +26,29 @@ Accounting rules (budget-tested):
   frequency without conflating them with blocking syncs.
 * *completing* an async fetch (``AsyncFetch.get``) is not a counted event:
   the copy was issued — and accounted — when the handle was created.
+* counter scopes are **thread-local**: a ``SyncCounter`` only observes
+  syncs issued by the thread that entered it (the serving layer budgets
+  each session's worker-thread execution independently).
 """
 from __future__ import annotations
 
+import threading
 from collections import Counter, deque
 from typing import Any, Deque, Iterator, List
 
 import jax
 
-_active: List["SyncCounter"] = []
+# Counter scopes are PER THREAD: the serving layer (repro/serve) runs many
+# client sessions against one process, and a SyncCounter opened around one
+# session's query must not absorb syncs issued by another thread's work.
+_tls = threading.local()
+
+
+def _active() -> List["SyncCounter"]:
+    lst = getattr(_tls, "counters", None)
+    if lst is None:
+        lst = _tls.counters = []
+    return lst
 
 
 class SyncCounter:
@@ -59,17 +73,17 @@ class SyncCounter:
         self.label_counts: Counter = Counter()
 
     def __enter__(self) -> "SyncCounter":
-        _active.append(self)
+        _active().append(self)
         return self
 
     def __exit__(self, *exc) -> bool:
-        _active.remove(self)
+        _active().remove(self)
         return False
 
 
 def device_get(tree: Any, label: str = "") -> Any:
     """``jax.device_get`` with sync accounting (one event per call)."""
-    for c in _active:
+    for c in _active():
         c.count += 1
         c.events.append(label)
         c.label_counts[label] += 1
@@ -128,7 +142,7 @@ def device_get_async(tree: Any, label: str = "") -> AsyncFetch:
                 # buffers, ...) must surface HERE, not at some later
                 # unrelated .get() — so only the unsupported cases pass.
                 pass
-    for c in _active:
+    for c in _active():
         c.async_count += 1
         c.events.append(label)
         c.label_counts[label] += 1

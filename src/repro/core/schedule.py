@@ -122,6 +122,19 @@ class Schedule:
     def describe(self) -> str:
         return "\n".join(str(op) for op in self.ops)
 
+    def signature(self) -> str:
+        """Stable structural hash of the lowered op list (kind, depth, node,
+        adhesion and the eligibility flags of every op).  Two engines with
+        equal signatures execute the same instruction stream, so persisted
+        tier-2 state keyed by it (``repro/serve/persist.py``) can be
+        replayed safely; a lowering change invalidates old snapshots by
+        changing the signature, never by corrupting a replay."""
+        import hashlib
+        parts = [(op.kind, op.d, op.node, op.adhesion, op.probe, op.dedup,
+                  op.sub_first, op.sub_last) for op in self.ops]
+        blob = repr((self.n, parts)).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
 
 def lower(n: int, plan: Optional[Any] = None,
           cacheable: Optional[Callable[[int], bool]] = None,

@@ -52,6 +52,7 @@ __all__ = ["ExpandSpec", "lower_bound", "upper_bound", "expand_fn",
            "select_expand", "autotune_cache", "failures",
            "clear_autotune_cache", "device_op_count",
            "save_autotune_cache", "load_autotune_cache",
+           "autotune_entries", "merge_autotune_entries",
            "AUTOTUNE_CACHE_ENV"]
 
 
@@ -161,6 +162,46 @@ def clear_autotune_cache() -> None:
     _sidecar_loaded = False
 
 
+def autotune_entries() -> list:
+    """The measured autotune decisions as JSON-able records — the sidecar
+    file's ``entries`` list, exposed so larger snapshots (the serving
+    layer's ``repro/serve/persist.py``) can embed the same records instead
+    of shipping a second file format.  Heuristic (unmeasured) decisions
+    are excluded, as in :func:`save_autotune_cache`."""
+    return [{"spec": dataclasses.asdict(spec), "platform": platform,
+             "choice": choice}
+            for (spec, platform), choice in _AUTOTUNE.items()
+            if (spec, platform) in _MEASURED]
+
+
+def merge_autotune_entries(entries) -> int:
+    """Merge sidecar-format records into the in-memory cache.
+
+    In-memory decisions win (this process may have re-measured); malformed
+    entries are skipped individually so one bad record cannot poison the
+    rest.  Returns the number of entries merged."""
+    if not isinstance(entries, (list, tuple)):
+        return 0
+    fields = {f.name for f in dataclasses.fields(ExpandSpec)}
+    n = 0
+    for ent in entries:
+        try:
+            spec_d = dict(ent["spec"])
+            if set(spec_d) != fields:
+                continue  # written by a different ExpandSpec revision
+            key = (ExpandSpec(**spec_d), str(ent["platform"]))
+            choice = str(ent["choice"])
+            if choice not in ("pallas", "xla"):
+                continue
+        except (KeyError, TypeError, ValueError):
+            continue
+        if key not in _AUTOTUNE:
+            _AUTOTUNE[key] = choice
+            _MEASURED.add(key)  # sidecar entries originate from timing runs
+            n += 1
+    return n
+
+
 def save_autotune_cache(path: Optional[str] = None) -> Optional[str]:
     """Persist the measured autotune decisions as a JSON sidecar.
 
@@ -185,10 +226,7 @@ def save_autotune_cache(path: Optional[str] = None) -> Optional[str]:
     # cache — the loser re-measures once); no locking for that corner.
     if os.path.exists(path):
         load_autotune_cache(path)
-    entries = [{"spec": dataclasses.asdict(spec), "platform": platform,
-                "choice": choice}
-               for (spec, platform), choice in _AUTOTUNE.items()
-               if (spec, platform) in _MEASURED]
+    entries = autotune_entries()
     if not entries:
         return None
     payload = {"version": _SIDECAR_VERSION, "entries": entries}
@@ -224,24 +262,7 @@ def load_autotune_cache(path: Optional[str] = None) -> int:
         if os.path.exists(path):
             warnings.warn(f"ignoring unreadable autotune sidecar {path}: {e}")
         return 0
-    fields = {f.name for f in dataclasses.fields(ExpandSpec)}
-    n = 0
-    for ent in entries:
-        try:
-            spec_d = dict(ent["spec"])
-            if set(spec_d) != fields:
-                continue  # written by a different ExpandSpec revision
-            key = (ExpandSpec(**spec_d), str(ent["platform"]))
-            choice = str(ent["choice"])
-            if choice not in ("pallas", "xla"):
-                continue
-        except (KeyError, TypeError, ValueError):
-            continue
-        if key not in _AUTOTUNE:
-            _AUTOTUNE[key] = choice
-            _MEASURED.add(key)  # sidecar entries originate from timing runs
-            n += 1
-    return n
+    return merge_autotune_entries(entries)
 
 
 def _autoload_sidecar() -> None:

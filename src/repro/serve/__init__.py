@@ -1,0 +1,33 @@
+"""Query-serving layer over the join-engine facade (DESIGN.md §2.9).
+
+The paper's thesis — caching subtree results pays off when joins *recur* —
+only pays across queries if something outlives one engine object.  This
+package is that something:
+
+* :mod:`canonical`  — canonical labeling of CQ shapes/TDs, so isomorphic
+  queries derive the same plan-cache key;
+* :mod:`plancache`  — the compile-once plan cache: one long-lived
+  :class:`~repro.core.cached_frontier.JaxCachedTrieJoin` per canonical
+  ``(CQ shape, TD, order, JoinEngineConfig)``, its tier-2 tables staying
+  warm across queries;
+* :mod:`persist`    — versioned on-disk snapshots of the plan cache's
+  tier-2 payload/count tables plus the kernel-autotune sidecar entries,
+  so warmth survives the *process* (corrupt file → cold start, never an
+  error);
+* :mod:`session`    — the admission/queueing session layer: many
+  concurrent clients ride ``evaluate_stream`` through one device-serial
+  worker, bounded in-flight sessions, graceful rejection with retry-after.
+
+Entry point: ``repro.core.engine.serve(db)`` or :class:`JoinServer` here.
+"""
+from .canonical import canonical_cq, canonical_td, config_key
+from .plancache import CachedPlan, PlanCache
+from .persist import SNAPSHOT_VERSION, load_snapshot, save_snapshot
+from .session import JoinServer, Session, SessionRejected
+
+__all__ = [
+    "canonical_cq", "canonical_td", "config_key",
+    "CachedPlan", "PlanCache",
+    "SNAPSHOT_VERSION", "load_snapshot", "save_snapshot",
+    "JoinServer", "Session", "SessionRejected",
+]

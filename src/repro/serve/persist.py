@@ -1,0 +1,152 @@
+"""Versioned on-disk snapshots of the serving layer's warm state.
+
+One compressed ``.npz`` holds, per resident plan: the canonical query,
+TD and order (enough to rebuild the engine in a fresh process), the
+schedule signature it was lowered to, and every tier-2 table's exported
+state — key/count planes, payload metadata, the slab arena *and its
+host-side epoch* (``slab_bump``/``payload_flushes``; see
+:meth:`DeviceCache.import_state` for why the epoch is load-bearing).
+The kernel registry's measured autotune entries ride along in the same
+manifest, so a fresh process also skips re-measuring EXPAND dispatch.
+
+Failure discipline mirrors the autotune sidecar's: a missing, truncated,
+corrupt or wrong-schema snapshot is a *fallback to cold*, never an error
+— per plan (one bad plan record cannot poison the rest) and per table
+(the cache layer's import validation cold-starts just the payload region
+when the slab epoch is unusable).  Writes are atomic
+(temp file + ``os.replace``), so a concurrent reader never sees a torn
+snapshot.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.cq import CQ, Atom
+from ..core.td import TreeDecomposition
+from ..kernels import registry as _registry
+
+__all__ = ["SNAPSHOT_VERSION", "save_snapshot", "load_snapshot"]
+
+SNAPSHOT_VERSION = 1
+_SCALARS = ("slab_bump", "payload_flushes", "tick")
+
+
+def save_snapshot(path: str, plan_cache) -> str:
+    """Write the plan cache's warm state to ``path``; returns ``path``."""
+    manifest: Dict = {"version": SNAPSHOT_VERSION,
+                      "cfg_key": plan_cache.cfg_key,
+                      "autotune": _registry.autotune_entries(),
+                      "plans": []}
+    arrays: Dict[str, np.ndarray] = {}
+    for i, entry in enumerate(plan_cache.entries()):
+        states = entry.engine.cache.export_state()
+        rec = {"atoms": [[a.relation, list(a.vars)]
+                         for a in entry.cq.atoms],
+               "bags": [sorted(b) for b in entry.td.bags],
+               "parent": list(entry.td.parent),
+               "order": list(entry.order),
+               # original key components ("auto" when the writer's
+               # clients let the planner choose) — the loader registers
+               # under these so a fresh process's td=None lookups hit
+               "td_key": entry.key[1],
+               "order_key": entry.key[2],
+               "schedule_sig": entry.schedule_sig,
+               "tables": {}}
+        for node, st in states.items():
+            names = {}
+            scal = {}
+            for k, v in st.items():
+                if k in _SCALARS:
+                    scal[k] = int(v)
+                else:
+                    nm = f"p{i}_n{node}_{k}"
+                    arrays[nm] = np.asarray(v)
+                    names[k] = nm
+            rec["tables"][str(node)] = {"arrays": names, **scal}
+        manifest["plans"].append(rec)
+    arrays["manifest"] = np.frombuffer(
+        json.dumps(manifest).encode("utf-8"), np.uint8).copy()
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def load_snapshot(path: str, plan_cache) -> Dict[str, int]:
+    """Warm ``plan_cache`` from a snapshot written by :func:`save_snapshot`.
+
+    For each persisted plan whose config matches the cache's, the engine
+    is (re)built through ``plan_cache.restore`` — paying construction and
+    compile once at load time instead of on the first client query, and
+    registering under the writer's original key so ``td=None`` client
+    lookups hit — then its tier-2 tables adopt the persisted state.  Plans whose schedule
+    signature no longer matches (a lowering change since the writer) are
+    skipped cold.  Returns a summary dict; on any unreadable file:
+    ``{"status": "cold", ...zeros}`` after a warning — never an
+    exception."""
+    out = {"status": "ok", "plans": 0, "tables": 0, "flushed": 0,
+           "skipped": 0, "autotune": 0}
+    try:
+        with np.load(path) as z:
+            manifest = json.loads(bytes(z["manifest"]).decode("utf-8"))
+            if manifest.get("version") != SNAPSHOT_VERSION:
+                raise ValueError(
+                    f"snapshot version {manifest.get('version')!r} != "
+                    f"{SNAPSHOT_VERSION}")
+            out["autotune"] = _registry.merge_autotune_entries(
+                manifest.get("autotune", []))
+            if manifest.get("cfg_key") != plan_cache.cfg_key:
+                # a different engine config keys different plans AND
+                # different table geometry: only the autotune transfers
+                out["status"] = "config-mismatch"
+                return out
+            plans = manifest.get("plans", [])
+            if not isinstance(plans, list):
+                raise TypeError("plans must be a list")
+            for rec in plans:
+                try:
+                    _load_plan(z, rec, plan_cache, out)
+                except Exception as e:
+                    warnings.warn(
+                        f"skipping one snapshot plan from {path}: {e}")
+                    out["skipped"] += 1
+    except Exception as e:
+        warnings.warn(f"ignoring unreadable serve snapshot {path}: {e}")
+        return {"status": "cold", "plans": 0, "tables": 0, "flushed": 0,
+                "skipped": 0, "autotune": 0}
+    return out
+
+
+def _load_plan(z, rec: Dict, plan_cache, out: Dict[str, int]) -> None:
+    cq = CQ(tuple(Atom(str(rel), tuple(str(v) for v in vs))
+                  for rel, vs in rec["atoms"]))
+    td = TreeDecomposition([frozenset(b) for b in rec["bags"]],
+                           [int(p) for p in rec["parent"]])
+    order = tuple(str(v) for v in rec["order"])
+    entry, _resident = plan_cache.restore(
+        cq, td, order,
+        td_key=str(rec.get("td_key", "auto")),
+        order_key=str(rec.get("order_key", "auto")))
+    if entry.schedule_sig != rec.get("schedule_sig"):
+        # the lowering changed since this snapshot was written: its table
+        # state describes a different instruction stream — start cold
+        out["skipped"] += 1
+        return
+    states: Dict[int, Dict[str, object]] = {}
+    for node, trec in rec["tables"].items():
+        st: Dict[str, object] = {k: z[nm]
+                                 for k, nm in trec["arrays"].items()}
+        for k in _SCALARS:
+            if k in trec:
+                st[k] = int(trec[k])
+        states[int(node)] = st
+    statuses = entry.engine.cache.import_state(states)
+    out["plans"] += 1
+    out["tables"] += sum(1 for s in statuses.values() if s == "ok")
+    out["flushed"] += sum(1 for s in statuses.values() if s == "flushed")
